@@ -1,0 +1,80 @@
+"""Shared benchmark machinery.
+
+Every table harness returns rows `(name, us_per_call, derived)` where
+`us_per_call` is a measured CPU wall time of the reduced config's jitted
+step and `derived` carries the quantity the paper's table reports
+(bits/dim, perplexity target, steps/sec estimate, JSD, ...). CPU wall
+times are NOT TPU projections — TPU numbers come from the roofline model
+(benchmarks/roofline.py); both are printed so the derivation is visible.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ModelConfig, RoutingConfig, RunConfig,
+                                TrainConfig, with_overrides)
+from repro.data.synthetic import SyntheticLoader
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def time_step(fn: Callable, args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall microseconds per call of a jitted step."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def shrink(cfg: ModelConfig, layers=2, d=64, heads=4, seq=256,
+           vocab=None) -> ModelConfig:
+    """Reduce a paper config to CPU scale, preserving the head/layer
+    structure knobs that matter for the ablation being measured."""
+    rl = cfg.routing.routing_layers
+    if rl:
+        # keep the suffix structure proportionally
+        n_routing = max(1, int(len(rl) * layers / cfg.num_layers))
+        rl = tuple(range(layers - n_routing, layers))
+    routing = with_overrides(
+        cfg.routing, num_clusters=min(cfg.routing.num_clusters, 8),
+        window=0, local_window=min(cfg.routing.local_window, seq // 4),
+        routing_layers=rl)
+    return with_overrides(
+        cfg, num_layers=layers, d_model=d, num_heads=heads,
+        num_kv_heads=heads, head_dim=0, d_ff=4 * d,
+        vocab_size=vocab or min(cfg.vocab_size, 256),
+        attn_window=min(cfg.attn_window, seq // 4),
+        routing=routing, dropout=0.0, dtype="float32", max_seq_len=seq)
+
+
+def train_step_time(cfg: ModelConfig, batch_size=2, seq=256,
+                    steps_measure=3) -> Tuple[float, float]:
+    """(us_per_step, loss_after) for a reduced config."""
+    run = RunConfig(model=cfg, train=TrainConfig(
+        global_batch=batch_size, seq_len=seq, lr=1e-3, schedule="const",
+        warmup_steps=2))
+    ts = init_train_state(run, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(run))
+    loader = SyntheticLoader("markov", cfg.vocab_size, batch_size, seq)
+    b = {k: jnp.asarray(v) for k, v in next(iter(loader)).items()}
+    us = time_step(step, (ts, b))
+    ts2, m = step(ts, b)
+    return us, float(m["loss"])
+
+
+def nats_to_bits_per_dim(nll_nats: float) -> float:
+    return nll_nats / np.log(2.0)
+
+
+def nats_to_ppl(nll_nats: float) -> float:
+    return float(np.exp(nll_nats))

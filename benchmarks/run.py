@@ -1,0 +1,22 @@
+"""Benchmark entry point: one harness per paper table + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured entity).
+``us_per_call`` is the reduced-config CPU step wall-time; ``derived``
+carries the table's quantity (paper reference value, measured ratio, JSD,
+bits/dim, ...). TPU-projected numbers live in the roofline table
+(EXPERIMENTS.md §Roofline), not here.
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks.tables import ALL_TABLES
+    print("name,us_per_call,derived")
+    for table in ALL_TABLES:
+        for name, us, derived in table():
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

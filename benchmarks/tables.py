@@ -1,0 +1,188 @@
+"""Benchmark harnesses, one per paper table (Roy et al. 2020).
+
+Tables 1-5 and 7 report model quality/speed from multi-week TPUv3 runs;
+on this CPU container each harness (a) builds the *exact* published
+architecture, (b) measures the step mechanics on a structure-preserving
+reduced config, and (c) reports the paper's published value as the
+reference target next to the reduced-scale measurement. Table 6 (JSD
+analysis) is reproduced *for real* at reduced scale — it is a property of
+the mechanism, not of weeks of training.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (nats_to_bits_per_dim, shrink, time_step,
+                               train_step_time)
+from repro.configs import paper
+from repro.configs.base import with_overrides
+
+Row = Tuple[str, float, str]
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — CIFAR-10 ablations (routing heads/layers x window, steps/sec)
+# ---------------------------------------------------------------------------
+def table1_cifar10() -> List[Row]:
+    rows: List[Row] = []
+    grid = [(0, 0, 512), (2, 2, 512), (4, 4, 512), (8, 12, 512),
+            (4, 4, 1024)]
+    paper_bpd = {(0, 0, 512): 3.009, (2, 2, 512): 3.005, (4, 4, 512): 2.975,
+                 (8, 12, 512): 3.400, (4, 4, 1024): 2.950}
+    base_us = None
+    for rh, rl, w in grid:
+        cfg = shrink(paper.cifar10(rh, rl, w), layers=4, seq=256)
+        us, loss = train_step_time(cfg, seq=256)
+        if rh == 0:
+            base_us = us
+        rows.append((f"table1/cifar10_r{rh}x{rl}_w{w}", us,
+                     f"paper_bpd={paper_bpd[(rh, rl, w)]};"
+                     f"rel_step_time={us / base_us:.2f};loss={loss:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Tables 2/3/5 — LM perplexity configs (wikitext-103 / enwik8 / pg19)
+# ---------------------------------------------------------------------------
+def _lm_table(name: str, cfg_full, paper_value: str) -> List[Row]:
+    cfg = shrink(cfg_full, layers=3, seq=512)
+    us, loss = train_step_time(cfg, seq=512)
+    full = cfg_full
+    return [(f"{name}/{full.name}", us,
+             f"{paper_value};params={full.param_count()/1e6:.0f}M;"
+             f"reduced_loss={loss:.2f}")]
+
+
+def table2_wikitext103() -> List[Row]:
+    return _lm_table("table2", paper.wikitext103(),
+                     "paper_test_ppl=15.8_vs_txl_18.3")
+
+
+def table3_enwik8() -> List[Row]:
+    return _lm_table("table3", paper.enwik8(),
+                     "paper_bpb=0.99_vs_adaptive_0.98")
+
+
+def table5_pg19() -> List[Row]:
+    return _lm_table("table5", paper.pg19(),
+                     "paper_test_ppl=33.2_SOTA_vs_compressive_33.6")
+
+
+# ---------------------------------------------------------------------------
+# Table 4 — ImageNet-64 bits/dim
+# ---------------------------------------------------------------------------
+def table4_imagenet64() -> List[Row]:
+    cfg = shrink(paper.imagenet64(), layers=3, seq=512)
+    us, loss = train_step_time(cfg, seq=512)
+    bpd = nats_to_bits_per_dim(loss)
+    return [("table4/rt-imagenet64", us,
+             f"paper_bpd=3.43_vs_sparse_tx_3.44;reduced_bpd={bpd:.2f}")]
+
+
+# ---------------------------------------------------------------------------
+# Table 6 — Jensen-Shannon divergence between local and routing heads
+# ---------------------------------------------------------------------------
+def _jsd(p: np.ndarray, q: np.ndarray) -> float:
+    m = 0.5 * (p + q)
+
+    def kl(a, b):
+        mask = a > 0
+        return float(np.sum(a[mask] * np.log(a[mask] / np.maximum(
+            b[mask], 1e-20))))
+
+    return 0.5 * kl(p, m) + 0.5 * kl(q, m)
+
+
+def table6_jsd() -> List[Row]:
+    """Reproduces the paper's analysis: attention distributions of routing
+    heads diverge strongly from local heads (JSD near the ln2 ~= 0.693
+    bound), while local||local stays low. Computed from an actual reduced
+    Routing Transformer forward pass (real mechanism, reduced scale)."""
+    from repro.configs.base import ModelConfig, RoutingConfig
+    from repro.core.kmeans import init_kmeans, normalize_routing
+    from repro.core.routing import routed_attention
+    from repro.core.local import local_attention
+    from repro.models.model import init_model
+    from repro.models import layers as L
+
+    N, dh, H = 256, 16, 4
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=H, num_kv_heads=H,
+                      d_ff=128, vocab_size=128, attention="local+routing",
+                      routing=RoutingConfig(num_clusters=8, local_window=32),
+                      dtype="float32")
+    params, kstate = init_model(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, 128, (1, N)))
+    x = L.embed(params["embed"], toks)
+    p0 = params["stack"][0]
+    attn_p = jax.tree.map(lambda a: a[0], p0)[0]["attn"]
+    h = L.apply_norm(jax.tree.map(lambda a: a[0], p0)[0]["ln1"], x, cfg.norm)
+    q, k, v = L.qkv_project(attn_p, h, cfg, rope=False)
+
+    # local head attention distribution over the full sequence
+    w = 32
+    pos = np.arange(N)
+    blk = pos // w
+    keep = ((blk[:, None] - blk[None, :] >= 0)
+            & (blk[:, None] - blk[None, :] <= 1)
+            & (pos[:, None] >= pos[None, :]))
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(q.shape[-1])
+    s = jnp.where(jnp.asarray(keep)[None, None], s, -1e9)
+    local_attn = np.asarray(jax.nn.softmax(s, -1))        # (1,H,N,N)
+
+    # routing head attention scattered back to (N, N) — use the routing
+    # half of the heads (the paper's split), whose centroids live in kstate
+    from repro.core.kmeans import KMeansState
+    from repro.models.transformer import head_split
+    Hl, Hr, _, _ = head_split(cfg)
+    mu = kstate[0]["0"][0]                                # (Hr, kc, dh)
+    ro = routed_attention(q[:, Hl:], None, v[:, Hl:], KMeansState(mu=mu),
+                          cfg.routing, return_attn=True)
+    kc, wsz = ro.q_idx.shape[2], ro.q_idx.shape[3]
+    routing_attn = np.zeros((1, Hr, N, N))
+    qi = np.asarray(ro.q_idx)
+    at = np.asarray(ro.attn)
+    for hh in range(Hr):
+        for c in range(kc):
+            rows_ = qi[0, hh, c]
+            routing_attn[0, hh, rows_[:, None], rows_[None, :]] += \
+                at[0, hh, c]
+    routing_attn /= np.maximum(routing_attn.sum(-1, keepdims=True), 1e-20)
+
+    t = N - 1      # the paper computes over the sequence; use the last row
+    out: List[Row] = []
+    ll = _jsd(local_attn[0, 0, t], local_attn[0, 1, t])
+    lr = _jsd(local_attn[0, 0, t], routing_attn[0, 0, t])
+    rr = _jsd(routing_attn[0, 0, t], routing_attn[0, 1, t])
+    out.append(("table6/jsd_local_local", 0.0,
+                f"jsd={ll:.3f};paper_range=0.00-0.31"))
+    out.append(("table6/jsd_local_routing", 0.0,
+                f"jsd={lr:.3f};paper_range=0.47-0.67;bound=0.693"))
+    out.append(("table6/jsd_routing_routing", 0.0,
+                f"jsd={rr:.3f};paper_range=0.16-0.58"))
+    assert lr > ll, "routing heads must diverge from local heads"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 7 — step-time: Local vs Routing Transformer (PG-19)
+# ---------------------------------------------------------------------------
+def table7_steptime() -> List[Row]:
+    base = paper.pg19()
+    local_only = with_overrides(base, attention="local")
+    cfg_r = shrink(base, layers=3, seq=512)
+    cfg_l = shrink(local_only, layers=3, seq=512)
+    us_r, _ = train_step_time(cfg_r, seq=512)
+    us_l, _ = train_step_time(cfg_l, seq=512)
+    ratio = us_r / us_l
+    return [("table7/local_transformer", us_l, "paper_steps_per_s=1.231"),
+            ("table7/routing_transformer", us_r,
+             f"paper_steps_per_s=0.7236;paper_ratio=1.70;"
+             f"measured_ratio={ratio:.2f}")]
+
+
+ALL_TABLES = [table1_cifar10, table2_wikitext103, table3_enwik8,
+              table4_imagenet64, table5_pg19, table6_jsd, table7_steptime]

@@ -1,0 +1,67 @@
+"""Batched serving with the cluster-paged routing KV cache.
+
+Prefills a batch of 8 requests and decodes 32 tokens each through the
+Routing Transformer serving path (local ring cache + argmax-routed cluster
+pages, O(window + cap) per step instead of O(context)). Prints per-phase
+throughput.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RoutingConfig
+from repro.models.model import init_model
+from repro.serve.serving import init_cache, make_serve_step, prefill
+
+
+def main():
+    B, PREFIX, GEN = 8, 192, 32
+    cfg = ModelConfig(
+        name="rt-serve", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=1024,
+        attention="local+routing",
+        routing=RoutingConfig(num_clusters=8, local_window=32),
+        dtype="float32")
+    params, kstate = init_model(cfg, jax.random.PRNGKey(0))
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
+          f"batch={B} prefix={PREFIX} gen={GEN}")
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, PREFIX), 0,
+                              cfg.vocab_size)
+    cache = init_cache(cfg, B, max_len=PREFIX + GEN)
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, kstate, cache, {"tokens": toks}, cfg)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {B * PREFIX} tokens in {t_prefill*1e3:.0f} ms "
+          f"({B * PREFIX / t_prefill:.0f} tok/s)")
+
+    serve = jax.jit(make_serve_step(cfg))
+    tok = jnp.argmax(logits[:, -1], -1)
+    # warmup compile
+    _ = serve(params, kstate, cache, tok, jnp.full((B,), PREFIX, jnp.int32))
+    t0 = time.perf_counter()
+    cur = cache
+    for t in range(PREFIX, PREFIX + GEN):
+        lg, cur = serve(params, kstate, cur, tok,
+                        jnp.full((B,), t, jnp.int32))
+        tok = jnp.argmax(lg, -1)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    print(f"decode: {B * GEN} tokens in {t_decode*1e3:.0f} ms "
+          f"({B * GEN / t_decode:.0f} tok/s, "
+          f"{t_decode / GEN * 1e3:.1f} ms/step)")
+
+    # show the routing cache filled up
+    rlen = cur[0]["0"]["rlen"]
+    print(f"cluster page occupancy (layer group 0): "
+          f"min={int(rlen.min())} max={int(rlen.max())} "
+          f"sum/head={int(rlen.sum(-1).mean())} (== tokens seen)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Config registry: `--arch <id>` resolution, smoke reductions, input specs.
+
+`get_config(arch)` returns the full published config; `reduced_config(arch)`
+returns a same-family miniature for CPU smoke tests; `input_specs(cfg, cell)`
+returns ShapeDtypeStruct stand-ins for every model input of a shape cell
+(no allocation — the dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, RoutingConfig, ShapeCell,
+                                SHAPE_CELLS, with_overrides)
+from repro.configs import (granite_8b, hubert_xlarge,
+                           llama4_maverick_400b_a17b, llama4_scout_17b_a16e,
+                           llama_3_2_vision_11b, mamba2_780m, paper,
+                           phi4_mini_3_8b, qwen2_0_5b, recurrentgemma_9b,
+                           starcoder2_3b)
+
+ARCHS = {
+    "mamba2-780m": mamba2_780m.config,
+    "granite-8b": granite_8b.config,
+    "qwen2-0.5b": qwen2_0_5b.config,
+    "starcoder2-3b": starcoder2_3b.config,
+    "phi4-mini-3.8b": phi4_mini_3_8b.config,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e.config,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b.config,
+    "recurrentgemma-9b": recurrentgemma_9b.config,
+    "hubert-xlarge": hubert_xlarge.config,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b.config,
+    # the paper's own models
+    "rt-wikitext103": paper.wikitext103,
+    "rt-enwik8": paper.enwik8,
+    "rt-imagenet64": paper.imagenet64,
+    "rt-pg19": paper.pg19,
+    "rt-cifar10": paper.cifar10,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]()
+
+
+def _pow2_round(x: int) -> int:
+    return 2 ** max(0, round(math.log2(max(x, 1))))
+
+
+def routing_for_seq(cfg: ModelConfig, seq_len: int,
+                    segments: int = 0) -> ModelConfig:
+    """Scale k ~ sqrt(n) (paper's optimal choice) for a shape cell.
+
+    segments=0 -> auto: shard-local routing (segments=16, the TP width)
+    for seq >= 32k training/prefill shapes — the beyond-paper fix for the
+    global-top-k collective bottleneck (EXPERIMENTS.md §Perf). Decode
+    cells ignore segments (the cluster-paged cache is already local)."""
+    if segments == 0:
+        segments = 16 if seq_len >= 32768 else 1
+    n_local = max(seq_len // max(segments, 1), 1)
+    k = min(_pow2_round(int(math.sqrt(n_local))), max(n_local // 16, 1))
+    return with_overrides(cfg, routing=with_overrides(
+        cfg.routing, num_clusters=max(k, 1), window=0, segments=segments))
+
+
+def with_routing(cfg: ModelConfig) -> ModelConfig:
+    """Enable the paper's technique on a dense/moe/vlm arch (half heads
+    local, half routing — the paper's default split)."""
+    if cfg.family in ("ssm",):
+        return cfg                                  # inapplicable
+    attn = "local+routing"
+    return with_overrides(cfg, attention=attn)
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    """Same-family miniature: few layers/width, tiny vocab, small experts."""
+    cfg = get_config(arch)
+    pat = {"moe": max(2, cfg.moe_interleave), "vlm": 5,
+           "hybrid": len(cfg.hybrid_pattern or ("r", "r", "a"))}
+    L = pat.get(cfg.family, 2)
+    if cfg.family == "hybrid":
+        L = L + 1                                    # exercise the tail path
+    H = 4
+    Hkv = max(1, (cfg.num_kv_heads * H) // cfg.num_heads)
+    over = dict(
+        num_layers=L, d_model=64, num_heads=H, num_kv_heads=Hkv,
+        head_dim=16, d_ff=0 if cfg.family == "ssm" else 128,
+        vocab_size=128, dtype="float32", max_seq_len=512,
+        routing=with_overrides(cfg.routing, num_clusters=4, local_window=32,
+                               routing_layers=(), routing_heads=0),
+        attn_window=32, dropout=0.0)
+    if cfg.family == "moe":
+        over.update(moe_experts=4)
+    if cfg.family == "ssm":
+        over.update(ssm_state=16, ssm_chunk=32)
+    if cfg.family == "hybrid":
+        over.update(lru_width=64)
+    if cfg.family == "vlm":
+        over.update(num_image_tokens=17)
+    return with_overrides(cfg, **over)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                dtype: str = "bfloat16") -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if cell.kind in ("train", "prefill"):
+        # +1 for the next-token shift — not for encoders (masked prediction
+        # has no shift; an odd 4097 also breaks SP seq sharding)
+        extra = 1 if (cell.kind == "train" and cfg.family != "encoder") else 0
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S + extra), i32)}
+        if cfg.family == "encoder":
+            specs["features"] = jax.ShapeDtypeStruct(
+                (B, S + extra, cfg.d_model), act)
+            specs["mask_spans"] = jax.ShapeDtypeStruct(
+                (B, S + extra), jnp.bool_)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), act)
+        return specs
+    # decode: one token + positions; the cache is built separately
+    specs = {"tokens": jax.ShapeDtypeStruct((B,), i32),
+             "pos": jax.ShapeDtypeStruct((B,), i32)}
+    return specs
+
+
+def cell_by_name(name: str) -> ShapeCell:
+    for c in SHAPE_CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(name)

@@ -1,0 +1,16 @@
+"""hubert-xlarge [audio] — encoder-only masked prediction
+(arXiv:2106.07447).
+
+48L d_model=1280 16H d_ff=5120 vocab=504 (codebook targets). The conv
+waveform frontend is a STUB per spec: input_specs() feeds precomputed
+frame embeddings (B, S, d). Encoder => no decode shapes (skip noted).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="encoder", num_layers=48, d_model=1280,
+        num_heads=16, num_kv_heads=16, head_dim=80, d_ff=5120,
+        vocab_size=504, attention="full", is_causal=False, position="none",
+        norm="layernorm", act="gelu", mask_prob=0.08, max_seq_len=32768)

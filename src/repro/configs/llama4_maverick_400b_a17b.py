@@ -1,0 +1,17 @@
+"""llama4-maverick-400b-a17b [moe] — 128 experts, top-1, MoE every other
+layer (hf:meta-llama/Llama-4-Maverick-17B-128E pattern).
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048. ~400B total /
+~17B active. Trains with Adafactor (fp32-factored stats) so optimizer
+state fits v5e HBM — see EXPERIMENTS.md §Dry-run.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b", family="moe", num_layers=48,
+        d_model=5120, num_heads=40, num_kv_heads=8, d_ff=8192,
+        vocab_size=202048, moe_experts=128, moe_top_k=1, moe_interleave=2,
+        moe_shared_expert=True, attention="full", position="rope",
+        norm="rmsnorm", act="swiglu", max_seq_len=131072)

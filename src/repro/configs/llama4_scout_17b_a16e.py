@@ -1,0 +1,16 @@
+"""llama4-scout-17b-a16e [moe] — 16 experts, top-1, every layer MoE
+(hf:meta-llama/Llama-4-Scout-17B-16E).
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048; shared expert +
+top-1 routed expert per token (llama4 style).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e", family="moe", num_layers=48,
+        d_model=5120, num_heads=40, num_kv_heads=8, d_ff=8192,
+        vocab_size=202048, moe_experts=16, moe_top_k=1, moe_interleave=1,
+        moe_shared_expert=True, attention="full", position="rope",
+        norm="rmsnorm", act="swiglu", max_seq_len=131072)

@@ -1,0 +1,17 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers
+(hf:meta-llama/Llama-3.2-11B-Vision).
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; every 5th layer
+is a gated cross-attention layer over 1601 vision tokens. The vision
+tower is a STUB per spec: input_specs() provides patch embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", family="vlm", num_layers=40,
+        d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336,
+        vocab_size=128256, attention="full", position="rope",
+        norm="rmsnorm", act="swiglu", num_image_tokens=1601,
+        max_seq_len=131072)

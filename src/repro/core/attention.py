@@ -1,0 +1,116 @@
+"""Dense (full) causal/bidirectional GQA attention + memory-efficient path.
+
+Two implementations with identical math:
+  * `full_attention(..., chunk=0)` — one-shot einsum softmax (small N).
+  * `full_attention(..., chunk=c)` — lax.scan over KV chunks with a running
+    online-softmax accumulator (flash-attention recurrence); peak memory
+    O(N*c) instead of O(N^2). Used for the 32k/500k shape cells.
+
+GQA-native: q has H heads, k/v have Hkv heads; no materialized repeat.
+Softmax statistics are fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_BIG_NEG = -1e9
+
+
+def _split_gqa(q: jax.Array, num_kv: int) -> jax.Array:
+    B, H, N, dh = q.shape
+    return q.reshape(B, num_kv, H // num_kv, N, dh)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True,
+                   pad_mask: Optional[jax.Array] = None,
+                   positions: Optional[jax.Array] = None,
+                   chunk: int = 0,
+                   logit_scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,N,dh); k,v: (B,Hkv,M,dh); returns (B,H,N,dh).
+
+    pad_mask: (B, M) bool over keys. positions: (B, N) query positions for
+    the causal mask when N != M (decode: N=1 vs cache M).
+    """
+    if chunk:
+        return _chunked_attention(q, k, v, causal, pad_mask, positions,
+                                  chunk, logit_scale)
+    B, H, N, dh = q.shape
+    Hkv, M = k.shape[1], k.shape[2]
+    scale = logit_scale if logit_scale is not None else 1.0 / jnp.sqrt(dh)
+    qg = _split_gqa(q, Hkv)
+    logits = jnp.einsum("bhgnd,bhmd->bhgnm", qg, k).astype(jnp.float32)
+    logits = logits * jnp.float32(scale)
+    if causal:
+        pos_q = (positions if positions is not None
+                 else jnp.broadcast_to(jnp.arange(N), (B, N)))
+        pos_k = jnp.arange(M)
+        cm = pos_q[:, None, None, :, None] >= pos_k[None, None, None, None, :]
+        logits = jnp.where(cm, logits, _BIG_NEG)
+    if pad_mask is not None:
+        logits = jnp.where(pad_mask[:, None, None, None, :], logits, _BIG_NEG)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgnm,bhmd->bhgnd", attn.astype(v.dtype), v)
+    return out.reshape(B, H, N, dh)
+
+
+def _chunked_attention(q, k, v, causal, pad_mask, positions, chunk,
+                       logit_scale):
+    """Online-softmax scan over KV chunks (flash recurrence, XLA version)."""
+    B, H, N, dh = q.shape
+    Hkv, M = k.shape[1], k.shape[2]
+    scale = logit_scale if logit_scale is not None else 1.0 / jnp.sqrt(dh)
+    nc = -(-M // chunk)
+    Mp = nc * chunk
+    if Mp != M:
+        pad = [(0, 0), (0, 0), (0, Mp - M), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        pm = jnp.ones((B, M), bool) if pad_mask is None else pad_mask
+        pad_mask = jnp.pad(pm, [(0, 0), (0, Mp - M)])
+    kc = k.reshape(B, Hkv, nc, chunk, dh)
+    vc = v.reshape(B, Hkv, nc, chunk, dh)
+    pmc = (pad_mask.reshape(B, nc, chunk) if pad_mask is not None else None)
+    pos_q = (positions if positions is not None
+             else jnp.broadcast_to(jnp.arange(N), (B, N)))
+    qg = _split_gqa(q, Hkv)                             # (B,Hkv,g,N,dh)
+
+    def step(carry, ci):
+        m, l, acc = carry
+        kb = kc[:, :, ci]                               # (B,Hkv,c,dh)
+        vb = vc[:, :, ci]
+        logits = jnp.einsum("bhgnd,bhcd->bhgnc", qg, kb).astype(jnp.float32)
+        logits = logits * jnp.float32(scale)
+        pos_k = ci * chunk + jnp.arange(chunk)
+        keep = jnp.ones((B, 1, 1, N, chunk), bool)
+        if causal:
+            keep &= (pos_q[:, None, None, :, None]
+                     >= pos_k[None, None, None, None, :])
+        if pmc is not None:
+            keep &= pmc[:, ci][:, None, None, None, :]
+        logits = jnp.where(keep, logits, _BIG_NEG)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None]) * keep
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bhgnc,bhcd->bhgnd", p,
+                                vb.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    g = qg.shape[2]
+    m0 = jnp.full((B, Hkv, g, N), _BIG_NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, N), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, N, dh), jnp.float32)
+    # checkpoint the chunk body: the scan then saves only the (m, l, acc)
+    # carry chain instead of per-chunk fp32 logits/probs — without this the
+    # stacked residuals equal the full (N x M) score matrix and training
+    # memory explodes (flash-attention recomputes in bwd for the same
+    # reason). Measured: granite-8b train_4k 16.8 -> 6.7 GiB/chip (§Perf).
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  jnp.arange(nc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, N, dh).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Online mini-batch spherical k-means for routing attention.
+
+Implements the centroid machinery of Roy et al. 2020 (Section 4.1):
+
+* routing vectors are projected onto the (scaled) unit ball with a
+  scale/bias-free LayerNorm (`normalize_routing`) — this makes MIPS
+  equivalent to nearest-centroid search;
+* centroids are *state*, not parameters-with-gradients: they are updated by
+  an exponential moving average of the vectors assigned to them
+  (Algorithm 1, line 31), with padding excluded;
+* assignment for the EMA uses argmax over centroid affinities; membership
+  for attention uses balanced per-centroid top-w (in routing.py).
+
+State layout: centroids `mu` have shape (num_heads, k, head_dim) per routing
+layer; the framework threads a dict {layer_name: KMeansState} through the
+train step functionally.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansState(NamedTuple):
+    mu: jax.Array          # (H_r, k, dh) float32
+
+
+def init_kmeans(key: jax.Array, num_heads: int, num_clusters: int,
+                head_dim: int) -> KMeansState:
+    """Random unit-ball init, scaled like the routing vectors (sqrt(d))."""
+    mu = jax.random.normal(key, (num_heads, num_clusters, head_dim),
+                           dtype=jnp.float32)
+    mu = mu / (jnp.linalg.norm(mu, axis=-1, keepdims=True) + 1e-6)
+    return KMeansState(mu=mu * jnp.sqrt(head_dim).astype(jnp.float32))
+
+
+def normalize_routing(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """LayerNorm with scale/bias disabled (paper Section 4.1).
+
+    Output has exact norm sqrt(d): equivalent to projecting onto the
+    d-ball scaled by sqrt(d), which keeps entries O(1) (paper's stated
+    motivation for LN over plain l2 normalization).
+    """
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    return ((x32 - mean) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def cluster_scores(r: jax.Array, mu: jax.Array) -> jax.Array:
+    """Affinity of each routing vector to each centroid.
+
+    r: (B, H, N, dh), mu: (H, k, dh) -> (B, H, N, k). fp32 for stable top-k.
+    """
+    return jnp.einsum("bhnd,hkd->bhnk", r.astype(jnp.float32),
+                      mu.astype(jnp.float32))
+
+
+def ema_update(state: KMeansState, r_q: jax.Array,
+               r_k: Optional[jax.Array] = None,
+               mask: Optional[jax.Array] = None,
+               decay: float = 0.999) -> KMeansState:
+    """EMA centroid update (Algorithm 1 line 31), scatter-mean variant.
+
+    r_q / r_k: (B, H, N, dh) routing vectors (already normalized).
+    mask: (B, N) bool, True for real (non-pad) tokens.
+    With shared QK (causal LM) pass r_k=None: the Q and K sums coincide and
+    the (1-lambda)/2 + (1-lambda)/2 split collapses to a single mean.
+
+    We use the *mean* of assigned vectors rather than the paper's raw sum:
+    the sum makes the update magnitude depend on cluster occupancy (and
+    explodes for large batches); the mean is the standard mini-batch k-means
+    step (Bottou & Bengio 1995) and keeps centroid norms at the sqrt(d)
+    scale of the routing vectors. Flagged in DESIGN.md §3.
+    """
+    def one_side(r):
+        scores = cluster_scores(r, state.mu)              # (B,H,N,k)
+        assign = jnp.argmax(scores, axis=-1)              # (B,H,N)
+        k = state.mu.shape[1]
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (B,H,N,k)
+        if mask is not None:
+            onehot = onehot * mask[:, None, :, None].astype(jnp.float32)
+        # sum of members and member counts per (head, centroid)
+        sums = jnp.einsum("bhnk,bhnd->hkd", onehot, r.astype(jnp.float32))
+        cnts = jnp.einsum("bhnk->hk", onehot)
+        return sums, cnts
+
+    sums, cnts = one_side(r_q)
+    if r_k is not None:
+        s2, c2 = one_side(r_k)
+        sums, cnts = sums + s2, cnts + c2
+    means = sums / jnp.maximum(cnts, 1.0)[..., None]
+    # empty clusters keep their previous centroid (no decay toward zero)
+    occupied = (cnts > 0)[..., None]
+    new_mu = jnp.where(occupied, decay * state.mu + (1.0 - decay) * means,
+                       state.mu)
+    return KMeansState(mu=jax.lax.stop_gradient(new_mu))

@@ -1,0 +1,81 @@
+"""Blocked local (sliding-window) attention — the paper's local heads.
+
+Faithful to the Routing Transformer TF implementation: the sequence is cut
+into blocks of `window` tokens; a query block attends to itself and the
+previous block (plus the next block in encoder mode), causally masked on
+absolute positions. Effective receptive field per layer is in [w, 2w).
+GQA-native, fp32 softmax, O(N * w) memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_BIG_NEG = -1e9
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: int,
+                    causal: bool = True,
+                    pad_mask: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B,H,N,dh); k,v: (B,Hkv,N,dh) -> (B,H,N,dh)."""
+    B, H, N, dh = q.shape
+    Hkv = k.shape[1]
+    w = min(window, N)
+    nb = -(-N // w)
+    Np = nb * w
+    pm = jnp.ones((B, N), bool) if pad_mask is None else pad_mask
+    if Np != N:
+        padseq = [(0, 0), (0, 0), (0, Np - N), (0, 0)]
+        q = jnp.pad(q, padseq)
+        k = jnp.pad(k, padseq)
+        v = jnp.pad(v, padseq)
+        pm = jnp.pad(pm, [(0, 0), (0, Np - N)])
+
+    qb = q.reshape(B, Hkv, H // Hkv, nb, w, dh)
+    kb = k.reshape(B, Hkv, nb, w, dh)
+    vb = v.reshape(B, Hkv, nb, w, dh)
+    pmb = pm.reshape(B, nb, w)
+
+    def shifted(x, direction):
+        zeros = jnp.zeros_like(x[:, :, :1]) if x.ndim == 5 else \
+            jnp.zeros_like(x[:, :1])
+        if direction == -1:   # previous block
+            body = x[:, :, :-1] if x.ndim == 5 else x[:, :-1]
+            return jnp.concatenate([zeros, body], axis=-3 if x.ndim == 5 else 1)
+        body = x[:, :, 1:] if x.ndim == 5 else x[:, 1:]
+        return jnp.concatenate([body, zeros], axis=-3 if x.ndim == 5 else 1)
+
+    k_cat = [shifted(kb, -1), kb]
+    v_cat = [shifted(vb, -1), vb]
+    pm_cat = [shifted(pmb, -1), pmb]
+    # key absolute positions per block: prev block then own block
+    pos_own = (jnp.arange(nb)[:, None] * w + jnp.arange(w)[None, :])
+    pos_cat = [pos_own - w, pos_own]
+    if not causal:
+        k_cat.append(shifted(kb, +1))
+        v_cat.append(shifted(vb, +1))
+        pm_cat.append(shifted(pmb, +1))
+        pos_cat.append(pos_own + w)
+    kc = jnp.concatenate(k_cat, axis=-2)                 # (B,Hkv,nb,cw,dh)
+    vc = jnp.concatenate(v_cat, axis=-2)
+    pmc = jnp.concatenate(pm_cat, axis=-1)               # (B,nb,cw)
+    pos_k = jnp.concatenate(pos_cat, axis=-1)            # (nb,cw)
+
+    logits = jnp.einsum("bhgnwd,bhnud->bhgnwu", qb, kc).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh).astype(jnp.float32)
+    pos_q = pos_own                                      # (nb,w)
+    keep = (pos_k[:, None, :] >= 0) & (pos_k[:, None, :] < Np)
+    if causal:
+        keep &= pos_q[:, :, None] >= pos_k[:, None, :]
+    keep = keep[None, None, None] & pmc[:, None, None, :, None, :]
+    logits = jnp.where(keep, logits, _BIG_NEG)
+    attn = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (pad queries in encoder mode) -> zero output
+    any_keep = keep.any(-1, keepdims=True)
+    attn = jnp.where(any_keep, attn, 0.0)
+    out = jnp.einsum("bhgnwu,bhnud->bhgnwd", attn.astype(vc.dtype), vc)
+    out = out.reshape(B, H, Np, dh)
+    return out[:, :, :N]

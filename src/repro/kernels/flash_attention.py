@@ -1,0 +1,110 @@
+"""Causal flash attention — Pallas TPU kernel.
+
+Canonical TPU shape: grid (B*H, Nq/bq, Mk/bk) with the KV dimension as the
+*sequential* (arbitrary) axis; running-softmax statistics (m, l) and the
+output accumulator live in VMEM scratch across the KV sweep, so no (N x M)
+score matrix ever exists in HBM. Causal blocks strictly above the diagonal
+are skipped with pl.when (on hardware Mosaic elides them; the roofline model
+counts 2x fewer FLOPs than dense attention accordingly).
+
+GQA: the KV BlockSpec index-maps query-head bh -> kv head (bh % H) // g, so
+no repeated KV is materialized.
+
+VMEM budget per grid point (bq = bk = 128, dh <= 256, fp32 accumulators):
+q/k/v tiles 3*128*256*4B = 384 KiB + acc 128*256*4B = 128 KiB + stats — well
+under the ~16 MiB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e9
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq, bk, causal, scale):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip KV blocks strictly in the future of the whole Q block
+    run = (ik * bk <= iq * bq + (bq - 1)) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)             # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)             # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s * scale                                # (bq, bk)
+        if causal:
+            pos_q = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            pos_k = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(pos_q >= pos_k, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(pos_q >= pos_k, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B,H,N,dh); k,v: (B,Hkv,M,dh) -> (B,H,N,dh)."""
+    B, H, N, dh = q.shape
+    Hkv, M = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq = min(bq, N)
+    bk = min(bk, M)
+    assert N % bq == 0 and M % bk == 0, (N, bq, M, bk)
+    qf = q.reshape(B * H, N, dh)
+    kf = k.reshape(B * Hkv, M, dh)
+    vf = v.reshape(B * Hkv, M, dh)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // H) * Hkv + (bh % H) // g, ik, 0)
+
+    grid = (B * H, N // bq, M // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=1.0 / (dh ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, dh), kv_index),
+            pl.BlockSpec((1, bk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, N, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, N, dh)

@@ -1,0 +1,81 @@
+"""Blocked local (sliding-window) attention — Pallas TPU kernel.
+
+One grid point per (batch·head, query block). The query block attends its
+own block and the previous one (+ next in encoder mode) — the paper's local
+attention. Both KV tiles are index-mapped views of the same HBM array
+(block b-1 clamps to 0 and is masked for b == 0), so the softmax over the
+concatenated 2w (3w) keys happens entirely in VMEM in one shot: for w <= 512
+the (w x 2w) fp32 score tile is ~2 MiB, comfortably inside VMEM — no
+running-softmax needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e9
+
+
+def _kernel(q_ref, kp_ref, kc_ref, kn_ref, vp_ref, vc_ref, vn_ref, o_ref, *,
+            w, causal, scale, nb):
+    b = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                    # (w, dh)
+    ks = [kp_ref[0], kc_ref[0]] + ([kn_ref[0]] if not causal else [])
+    vs = [vp_ref[0], vc_ref[0]] + ([vn_ref[0]] if not causal else [])
+    k = jnp.concatenate([x.astype(jnp.float32) for x in ks], axis=0)
+    v = jnp.concatenate([x.astype(jnp.float32) for x in vs], axis=0)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    cw = k.shape[0]
+    pos_q = b * w + jax.lax.broadcasted_iota(jnp.int32, (w, cw), 0)
+    off = jax.lax.broadcasted_iota(jnp.int32, (w, cw), 1)
+    pos_k = (b - 1) * w + off                           # prev tile then own
+    keep = (pos_k >= 0) & (pos_k < nb * w)
+    if causal:
+        keep &= pos_q >= pos_k
+    s = jnp.where(keep, s, _NEG)
+    m = s.max(-1, keepdims=True)
+    p = jnp.where(keep, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jax.lax.dot_general(p / l, v, (((1,), (0,)), ((), ())))
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def local_attention_kernel(q, k, v, window, causal=True, interpret=True):
+    """q: (B,H,N,dh); k,v: (B,Hkv,N,dh); N % window == 0."""
+    B, H, N, dh = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    w = min(window, N)
+    assert N % w == 0, (N, w)
+    nb = N // w
+    qf = q.reshape(B * H, N, dh)
+    kf = k.reshape(B * Hkv, N, dh)
+    vf = v.reshape(B * Hkv, N, dh)
+
+    def kv_at(delta):
+        def index(bh, b):
+            kvh = (bh // H) * Hkv + (bh % H) // g
+            return (kvh, jnp.clip(b + delta, 0, nb - 1), 0)
+        return index
+
+    kv_spec = lambda d: pl.BlockSpec((1, w, dh), kv_at(d))
+    out = pl.pallas_call(
+        functools.partial(_kernel, w=w, causal=causal,
+                          scale=1.0 / (dh ** 0.5), nb=nb),
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1, w, dh), lambda bh, b: (bh, b, 0)),
+            kv_spec(-1), kv_spec(0), kv_spec(+1),
+            kv_spec(-1), kv_spec(0), kv_spec(+1),
+        ],
+        out_specs=pl.BlockSpec((1, w, dh), lambda bh, b: (bh, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, N, dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, kf, kf, vf, vf, vf)
+    return out.reshape(B, H, N, dh)

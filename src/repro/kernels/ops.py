@@ -1,0 +1,37 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True (this container is CPU; the kernel bodies then
+execute in Python with identical semantics). On TPU pass interpret=False —
+the call sites (core/routing.py `impl="pallas"`, models) only toggle a flag.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import local_attention as _local
+from repro.kernels import routing_attention as _routing
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=True):
+    return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
+def local_attention(q, k, v, window, causal=True, interpret=True):
+    return _local.local_attention_kernel(q, k, v, window, causal=causal,
+                                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
+                            valid_k=None, bq=128, bk=128, interpret=True):
+    return _routing.routed_attention_blocks(
+        qg, kg, vg, pos_q, pos_k, causal=causal, valid_k=valid_k,
+        bq=bq, bk=bk, interpret=interpret)

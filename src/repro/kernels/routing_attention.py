@@ -1,0 +1,106 @@
+"""Routed (intra-cluster) attention — Pallas TPU kernel. THE paper hot-spot.
+
+Stage 2 of the two-stage TPU adaptation (DESIGN.md §3): assignment/top-k/
+gather stay in XLA; this kernel computes the O(k·w²·d) attention over the
+*gathered* cluster blocks with flash-style streaming, so no (w x w) matrix
+ever reaches HBM.
+
+Inputs are the gathered blocks (B,H,k,w,dh) plus the original sequence
+positions of every gathered row. The causal mask compares those gathered
+positions (pos_q >= pos_k) — this is what makes cluster blocks order-correct
+— and invalid (padding) keys are encoded by the caller as pos_k = _SENTINEL,
+which the same comparison masks out for free.
+
+Grid: (B·H·k clusters, w/bq, w/bk) with the KV axis sequential; (m, l, acc)
+scratch in VMEM. MXU-aligned: bq = bk = 128 default, dh in {64, 128, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e9
+SENTINEL = 2 ** 30          # python int: usable inside the kernel body
+
+
+def _kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, causal, scale):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    pq = pq_ref[0]                                    # (bq,) int32
+    pk = pk_ref[0]                                    # (bk,) int32
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if causal:
+        keep = pq[:, None] >= pk[None, :]
+    else:
+        keep = (pk < SENTINEL)[None, :] & jnp.ones_like(s, bool)
+    s = jnp.where(keep, s, _NEG)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
+                            valid_k=None, bq=128, bk=128,
+                            interpret=True):
+    """qg/kg/vg: (B,H,k,w,dh); pos_q/pos_k: (B,H,k,w) -> (B,H,k,w,dh)."""
+    B, H, kc, w, dh = qg.shape
+    bq = min(bq, w)
+    bk = min(bk, w)
+    assert w % bq == 0 and w % bk == 0, (w, bq, bk)
+    n = B * H * kc
+    qf = qg.reshape(n, w, dh)
+    kf = kg.reshape(n, w, dh)
+    vf = vg.reshape(n, w, dh)
+    pqf = pos_q.reshape(n, w).astype(jnp.int32)
+    pkf = pos_k.reshape(n, w).astype(jnp.int32)
+    if valid_k is not None:
+        pkf = jnp.where(valid_k.reshape(n, w), pkf, SENTINEL)
+
+    grid = (n, w // bq, w // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, scale=1.0 / (dh ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda c, iq, ik: (c, iq, 0)),
+            pl.BlockSpec((1, bk, dh), lambda c, iq, ik: (c, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda c, iq, ik: (c, ik, 0)),
+            pl.BlockSpec((1, bq), lambda c, iq, ik: (c, iq)),
+            pl.BlockSpec((1, bk), lambda c, iq, ik: (c, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda c, iq, ik: (c, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, w, dh), qg.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf, pqf, pkf)
+    return out.reshape(B, H, kc, w, dh)

@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this builds the real step function (train_step / prefill
+forward / serve_step), shards it with the production rules (dist/sharding),
+lowers against ShapeDtypeStruct stand-ins (zero allocation), compiles for
+the 16x16 single-pod and 2x16x16 multi-pod meshes, and records:
+
+  * memory_analysis()  — bytes per device (proves the cell fits v5e HBM)
+  * cost_analysis()    — per-device HLO FLOPs / bytes for §Roofline
+  * collective bytes   — parsed from the compiled HLO per collective kind
+
+Results append incrementally to benchmarks/dryrun_results.json so the sweep
+is resumable. Skips are explicit records, never silent:
+  * encoder archs have no decode  -> status "skip_encoder_no_decode"
+  * long_500k on pure full-attention archs is impossible natively -> the
+    native row is "skip_native_quadratic" AND a routing-enabled variant row
+    (the paper's technique) is produced instead.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --cell train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--resume]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, cell_by_name, get_config, input_specs,
+                           routing_for_seq, with_routing)
+from repro.configs.base import (ModelConfig, RunConfig, TrainConfig,
+                                SHAPE_CELLS, with_overrides)
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "dryrun_results.json")
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("rt-")]
+FULL_ATTN_ARCHS = {"granite-8b", "qwen2-0.5b", "starcoder2-3b",
+                   "phi4-mini-3.8b", "llama4-scout-17b-a16e",
+                   "llama4-maverick-400b-a17b", "llama-3.2-vision-11b"}
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _line_collective(line: str):
+    for kind in _COLL_KINDS:
+        # match "= TYPE kind(" and "= TYPE kind-start("
+        if f" {kind}(" in line or f" {kind}-start(" in line:
+            lhs = line.split("=", 1)
+            if len(lhs) != 2:
+                return None
+            return kind, _shape_bytes(lhs[1].strip().split(f" {kind}")[0])
+    return None
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """HLO text -> {computation_name: body_text}."""
+    comps: Dict[str, str] = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                name = m.group(1)
+                buf = []
+                continue
+        if name is not None:
+            if line.startswith("}"):
+                comps[name] = "\n".join(buf)
+                name = None
+            else:
+                buf.append(line)
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\{?\}? constant\((\d+)\)")
+
+
+def _trip_count(cond_text: str) -> int:
+    """Heuristic: largest s32 scalar constant in the loop condition (lax.scan
+    emits `lt counter, constant(G)`)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Loop-aware per-device collective byte accounting.
+
+    XLA emits each while (lax.scan) body as ONE computation executed
+    trip-count times; naive line-counting undercounts scanned-layer
+    collectives by the group count. We build the while-nesting multiplier
+    per computation and weight its collective bytes accordingly.
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:                        # bare snippet (tests)
+        comps = {"entry": hlo_text}
+    mult = {name: 0.0 for name in comps}
+    referenced = set()
+    edges: Dict[str, list] = {name: [] for name in comps}
+    for name, text in comps.items():
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            edges[name].append((body, trips))
+            referenced.add(body)
+            referenced.add(cond)
+    for name in comps:
+        if name not in referenced:
+            mult[name] = 1.0
+    for _ in range(len(comps)):          # propagate down the nesting DAG
+        changed = False
+        for name, out_edges in edges.items():
+            for body, trips in out_edges:
+                new = mult.get(name, 0.0) * trips
+                if new > mult.get(body, 0.0):
+                    mult[body] = new
+                    changed = True
+        if not changed:
+            break
+
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    raw_total = 0
+    for name, text in comps.items():
+        m = mult.get(name) or 1.0
+        for line in text.splitlines():
+            hit = _line_collective(line)
+            if hit:
+                kind, b = hit
+                out[kind]["count"] += int(m)
+                out[kind]["bytes"] += int(b * m)
+                raw_total += b
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["raw_total_bytes"] = raw_total
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-cell step builders
+# ---------------------------------------------------------------------------
+SEQ_PARALLEL = os.environ.get("REPRO_SP", "1") == "1"
+
+
+def _train_cfg(arch: str, cfg: ModelConfig, cell) -> TrainConfig:
+    big = cfg.param_count() > 20e9
+    accum = {"llama4-maverick-400b-a17b": 4,
+             "llama4-scout-17b-a16e": 2}.get(arch, 1)
+    if not SEQ_PARALLEL:
+        accum = max(accum, 4)   # bound activation carries without SP
+    return TrainConfig(
+        global_batch=cell.global_batch, seq_len=cell.seq_len,
+        optimizer="adafactor" if big else "adam",
+        remat="full",
+        grad_accum=accum,
+        accum_dtype="bfloat16" if cfg.param_count() > 200e9 else "float32")
+
+
+FSDP_THRESHOLD = 20e9   # below this, params fit replicated-over-data +
+                        # TP and per-layer weight all-gathers are pure waste
+                        # (quantified in EXPERIMENTS.md §Perf: granite-8b
+                        # train collective bytes drop ~3x without FSDP)
+
+
+def _use_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() > FSDP_THRESHOLD
+
+
+def build_train(arch: str, cfg: ModelConfig, cell, mesh):
+    from repro.train.train_step import init_train_state, make_train_step
+    run = RunConfig(model=cfg, train=_train_cfg(arch, cfg, cell))
+    constrain = shd.make_constrain_fn(mesh, seq_parallel=SEQ_PARALLEL)
+    ts_shapes = jax.eval_shape(
+        functools.partial(init_train_state, run), jax.random.PRNGKey(0))
+    batch = input_specs(cfg, cell)
+    ts_spec = shd.train_state_sharding(mesh, ts_shapes,
+                                       fsdp=_use_fsdp(cfg))
+
+    def grad_constrain(grads):
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, ts_spec.params)
+
+    fn = make_train_step(run, constrain_fn=constrain,
+                         grad_constrain=grad_constrain)
+    b_spec = shd.batch_sharding(mesh, batch)
+    metrics_shape = jax.eval_shape(fn, ts_shapes, batch)[1]
+    m_spec = shd.replicated(mesh, metrics_shape)
+    jfn = jax.jit(fn, in_shardings=(ts_spec, b_spec),
+                  out_shardings=(ts_spec, m_spec), donate_argnums=(0,))
+    return jfn, (ts_shapes, batch)
+
+
+def build_prefill(arch: str, cfg: ModelConfig, cell, mesh):
+    from repro.models.model import init_model, apply_model
+
+    def forward(params, kstate, batch):
+        logits, _, _ = apply_model(
+            params, kstate, batch, cfg, update_state=False,
+            constrain_fn=shd.make_constrain_fn(mesh, seq_parallel=True))
+        return logits
+
+    pk = jax.eval_shape(functools.partial(init_model, cfg),
+                        jax.random.PRNGKey(0))
+    p_shapes, k_shapes = pk
+    batch = input_specs(cfg, cell)
+    p_spec = shd.params_sharding(mesh, p_shapes, fsdp=_use_fsdp(cfg))
+    k_spec = shd.replicated(mesh, k_shapes)
+    b_spec = shd.batch_sharding(mesh, batch)
+    dp = shd.dp_axes(mesh)
+    B = cell.global_batch
+    v_ok = cfg.padded_vocab % shd._axis_size(mesh, "model") == 0
+    lg_spec = NamedSharding(mesh, P(
+        dp if B % shd._axis_size(mesh, dp) == 0 else None, None,
+        "model" if v_ok else None))
+    jfn = jax.jit(forward, in_shardings=(p_spec, k_spec, b_spec),
+                  out_shardings=lg_spec)
+    return jfn, (p_shapes, k_shapes, batch)
+
+
+def build_decode(arch: str, cfg: ModelConfig, cell, mesh):
+    from repro.models.model import init_model
+    from repro.serve.serving import init_cache, make_serve_step
+
+    fn = make_serve_step(cfg)
+    pk = jax.eval_shape(functools.partial(init_model, cfg),
+                        jax.random.PRNGKey(0))
+    p_shapes, k_shapes = pk
+    B = cell.global_batch
+    cache_shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, cell.seq_len))
+    specs = input_specs(cfg, cell)
+    tokens, pos = specs["tokens"], specs["pos"]
+    p_spec = shd.params_sharding(mesh, p_shapes, fsdp=_use_fsdp(cfg))
+    k_spec = shd.replicated(mesh, k_shapes)
+    c_spec = shd.cache_sharding(mesh, cache_shapes, B)
+    dp = shd.dp_axes(mesh)
+    b_ok = B % shd._axis_size(mesh, dp) == 0
+    v_ok = cfg.padded_vocab % shd._axis_size(mesh, "model") == 0
+    t_spec = NamedSharding(mesh, P(dp if b_ok else None))
+    lg_spec = NamedSharding(mesh, P(dp if b_ok else None,
+                                    "model" if v_ok else None))
+    jfn = jax.jit(fn, in_shardings=(p_spec, k_spec, c_spec, t_spec, t_spec),
+                  out_shardings=(lg_spec, c_spec), donate_argnums=(2,))
+    return jfn, (p_shapes, k_shapes, cache_shapes, tokens, pos)
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+def cell_config(arch: str, cell_name: str, variant: str) -> ModelConfig:
+    cfg = get_config(arch)
+    cell = cell_by_name(cell_name)
+    if variant == "routing":
+        # decode keeps global cluster geometry (the paged cache shards kc
+        # across the mesh); train/prefill >=32k use shard-local segments
+        cfg = routing_for_seq(with_routing(cfg), cell.seq_len,
+                              segments=1 if cell.kind == "decode" else 0)
+    # memory-efficient chunked attention (the XLA stand-in for the flash
+    # kernel): bounds fp32 logits at (B, H, N, chunk) instead of (.., N)
+    if cell.seq_len >= 4096 and cfg.attention == "full":
+        cfg = with_overrides(cfg, attn_chunk=2048 if cell.seq_len >= 32768
+                             else 1024)
+    return cfg
+
+
+def cell_status(arch: str, cell_name: str, variant: str) -> str:
+    cfg = get_config(arch)
+    cell = cell_by_name(cell_name)
+    if cfg.family == "encoder" and cell.kind == "decode":
+        return "skip_encoder_no_decode"
+    if (cell_name == "long_500k" and variant == "native"
+            and arch in FULL_ATTN_ARCHS):
+        return "skip_native_quadratic(run routing variant instead)"
+    if variant == "routing" and cfg.family == "ssm":
+        return "skip_routing_inapplicable_ssm"
+    return "run"
+
+
+def analyze(compiled) -> Dict[str, Any]:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_device_bytes": int(ma.argument_size_in_bytes
+                                 + ma.output_size_in_bytes
+                                 + ma.temp_size_in_bytes
+                                 - ma.alias_size_in_bytes),
+        "collectives": collective_bytes(hlo),
+        "hlo_bytes": len(hlo),
+    }
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str,
+             variant: str = "native") -> Dict[str, Any]:
+    rec: Dict[str, Any] = {"arch": arch, "cell": cell_name,
+                           "mesh": mesh_kind, "variant": variant}
+    status = cell_status(arch, cell_name, variant)
+    rec["status"] = status
+    if status != "run":
+        return rec
+    cell = cell_by_name(cell_name)
+    cfg = cell_config(arch, cell_name, variant)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    builder = {"train": build_train, "prefill": build_prefill,
+               "decode": build_decode}[cell.kind]
+    t0 = time.time()
+    try:
+        with mesh:
+            jfn, args = builder(arch, cfg, cell, mesh)
+            lowered = jfn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+            rec.update(analyze(compiled))
+            rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Sweep
+# ---------------------------------------------------------------------------
+def load_results() -> Dict[str, Any]:
+    path = os.path.abspath(RESULTS)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(res: Dict[str, Any]) -> None:
+    path = os.path.abspath(RESULTS)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def cell_key(arch, cell, mesh, variant):
+    return f"{arch}|{cell}|{mesh}|{variant}"
+
+
+def all_cells(meshes=("pod", "multipod")):
+    for arch in ASSIGNED:
+        for cell in SHAPE_CELLS:
+            for mesh in meshes:
+                yield arch, cell.name, mesh, "native"
+                # routing variant where it is the only way to run the cell
+                if cell.name == "long_500k" and arch in FULL_ATTN_ARCHS:
+                    yield arch, cell.name, mesh, "routing"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--cell")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--variant", default="native",
+                    choices=["native", "routing"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    res = load_results()    # always merge into existing records
+    if args.all:
+        todo = list(all_cells())
+    else:
+        todo = [(args.arch, args.cell, args.mesh, args.variant)]
+    for arch, cell, mesh, variant in todo:
+        key = cell_key(arch, cell, mesh, variant)
+        prev = res.get(key, {}).get("status", "")
+        if args.resume and (prev == "ok" or prev.startswith("skip")):
+            print(f"[cached] {key}: {prev}")
+            continue
+        print(f"[run] {key} ...", flush=True)
+        rec = run_cell(arch, cell, mesh, variant)
+        res[key] = rec
+        save_results(res)
+        extra = ""
+        if rec["status"] == "ok":
+            extra = (f" peak={rec['peak_device_bytes']/2**30:.2f}GiB"
+                     f" flops/dev={rec['flops_per_device']:.3g}"
+                     f" coll={rec['collectives']['total_bytes']/2**30:.3f}GiB"
+                     f" ({rec['total_s']}s)")
+        elif rec["status"] == "error":
+            extra = " ERROR " + rec["error"][:200]
+        print(f"[done] {key}: {rec['status']}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

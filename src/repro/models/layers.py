@@ -1,0 +1,161 @@
+"""Shared layers: norms, RoPE, MLPs, projections, embeddings.
+
+Pure functional: `init_*` returns a param pytree (nested dict of arrays);
+`apply` functions are pure. Params are stored in the config dtype; matmuls
+run in that dtype with fp32 norm/softmax statistics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(d, kind, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, N, dh); positions: (B, N) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)          # (B,1,N,dh/2)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU / ReLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d, dtype)}
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p, x, act="swiglu"):
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        gate = x @ p["w_gate"]
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.relu(up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# QKV / output projections (GQA)
+# ---------------------------------------------------------------------------
+def init_attn_proj(key, cfg):
+    d, dh = cfg.d_model, cfg.head_dim_
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {"wq": dense_init(ks[0], d, H * dh, dt),
+         "wk": dense_init(ks[1], d, Hkv * dh, dt),
+         "wv": dense_init(ks[2], d, Hkv * dh, dt),
+         "wo": dense_init(ks[3], H * dh, d, dt)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dt)
+        p["bk"] = jnp.zeros((Hkv * dh,), dt)
+        p["bv"] = jnp.zeros((Hkv * dh,), dt)
+    return p
+
+
+def qkv_project(p, x, cfg, positions=None, rope=True):
+    """x: (B,N,d) -> q (B,H,N,dh), k/v (B,Hkv,N,dh)."""
+    B, N, _ = x.shape
+    dh, H, Hkv = cfg.head_dim_, cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, N, H, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, N, Hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, N, Hkv, dh).transpose(0, 2, 1, 3)
+    if rope and cfg.position == "rope":
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32),
+                                         (B, N))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(p, o):
+    """o: (B,H,N,dh) -> (B,N,d)."""
+    B, H, N, dh = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(B, N, H * dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / logits
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab, d, dtype, tie):
+    ks = jax.random.split(key, 2)
+    p = {"tok": (jax.random.normal(ks[0], (vocab, d)) * 0.02).astype(dtype)}
+    if not tie:
+        p["unembed"] = dense_init(ks[1], d, vocab, dtype)
+    return p
+
+
+def embed(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def logits_out(p, x, tie, softcap=0.0):
+    if tie:
+        lg = x @ p["tok"].T
+    else:
+        lg = x @ p["unembed"]
+    lg = lg.astype(jnp.float32)
+    if softcap:
+        lg = softcap * jnp.tanh(lg / softcap)
+    return lg

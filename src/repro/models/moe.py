@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN (llama4-style: top-1 router + shared expert).
+
+Two dispatch implementations with identical math:
+
+* `einsum` (default under pjit): Shazeer-style one-hot dispatch/combine
+  einsums with per-example capacity. GSPMD-friendly: with experts sharded on
+  the "model" axis and batch on "data", dispatch/expert/combine einsums
+  partition locally and the only collective is the TP-style all-reduce of the
+  combined output. No emulated NCCL all-to-all.
+* `scatter` (CPU/eval): position-in-expert scatter into (E, C, d) buffers —
+  zero dispatch FLOPs, used as the correctness oracle.
+
+Aux outputs: Switch-style load-balance loss + router z-loss + drop fraction.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f)) / jnp.sqrt(d)).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f)) / jnp.sqrt(d)).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d)) / jnp.sqrt(f)).astype(dt),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = init_mlp(ks[4], d, f, cfg.act, dt)
+    return p
+
+
+def _router(p, x, cfg):
+    """Returns (gate (B,N), expert_idx (B,N), probs fp32 (B,N,E), aux)."""
+    logits = (x.astype(jnp.float32) @ p["router"])            # (B,N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1)
+    gate = jnp.max(probs, axis=-1)
+    E = cfg.moe_experts
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    f_e = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gate, idx, probs, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+
+
+def _capacity(cfg, n):
+    return max(1, int(cfg.moe_capacity_factor * n / cfg.moe_experts))
+
+
+def apply_moe(p, x, cfg, impl: str = "einsum") -> Tuple[jax.Array, Dict]:
+    """x: (B, N, d) -> (B, N, d), aux dict."""
+    B, N, d = x.shape
+    E, C = cfg.moe_experts, _capacity(cfg, N)
+    gate, idx, probs, aux = _router(p, x, cfg)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # (B,N,E)
+    # position of each token within its expert's capacity buffer (per example)
+    pos = jnp.cumsum(onehot, axis=1) * onehot                 # (B,N,E) 1-based
+    pos_tok = (jnp.sum(pos, axis=-1) - 1.0)                   # (B,N) 0-based
+    keep = (pos_tok < C) & (pos_tok >= 0)
+    aux["moe_drop_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    if impl == "scatter":
+        y = _moe_scatter(p, x, cfg, idx, pos_tok, keep, C)
+    else:
+        y = _moe_einsum(p, x, cfg, onehot, pos_tok, keep, C)
+    y = y * gate[..., None].astype(y.dtype)
+    if cfg.moe_shared_expert:
+        y = y + apply_mlp(p["shared"], x, cfg.act)
+    return y.astype(x.dtype), aux
+
+
+def _moe_einsum(p, x, cfg, onehot, pos_tok, keep, C):
+    B, N, d = x.shape
+    E = cfg.moe_experts
+    # dispatch[b,n,e,c] = 1 iff token (b,n) is slot c of expert e
+    pos_oh = jax.nn.one_hot(pos_tok, C, dtype=jnp.float32) \
+        * keep[..., None].astype(jnp.float32)                 # (B,N,C)
+    dispatch = onehot[..., :, None] * pos_oh[..., None, :]    # (B,N,E,C)
+    dispatch = dispatch.astype(x.dtype)
+    xin = jnp.einsum("bnec,bnd->becd", dispatch, x)           # (B,E,C,d)
+    h = jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    if cfg.act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xin, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    return jnp.einsum("bnec,becd->bnd", dispatch, out)
+
+
+def _moe_scatter(p, x, cfg, idx, pos_tok, keep, C):
+    B, N, d = x.shape
+    E = cfg.moe_experts
+    pos = pos_tok.astype(jnp.int32)
+    slot = jnp.where(keep, pos, C)                    # overflow -> trash slot
+    bi = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E, C + 1, d), x.dtype).at[bi, idx, slot].add(x)
+    xin = buf[:, :, :C]                               # (B,E,C,d)
+    h = jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    if cfg.act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xin, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])        # (B,E,C,d)
+    y = out[bi, idx, jnp.minimum(slot, C - 1)] * \
+        keep[..., None].astype(out.dtype)
+    return y.reshape(B, N, d)

@@ -1,0 +1,149 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)           recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)           input gate
+    a_t = a ** (c * r_t),  a = sigmoid(Lambda)  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Implemented with an associative scan over (a, b) pairs of the linear
+recurrence h = a*h + b; a step-by-step oracle (`rglru_naive`) backs the
+tests. The full block is: linear-in -> causal conv(4) -> RG-LRU -> gated by
+a GeLU branch -> linear-out (Griffin recurrent block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, w, dt),
+        "w_gate_branch": dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (4, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": dense_init(ks[3], w, w, jnp.float32),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": dense_init(ks[4], w, w, jnp.float32),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        # Lambda init s.t. a in [0.9, 0.999] roughly
+        "lam": jnp.linspace(2.2, 6.9, w).astype(jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dt),
+    }
+
+
+def _gates(p, u):
+    """u: (B,S,w) fp32 -> per-step decay a_t and input b_t."""
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(u @ p["w_x"] + p["b_x"])
+    a_base = jax.nn.sigmoid(p["lam"])
+    log_a = _C * r * jnp.log(a_base)          # a_t = a ** (c r_t)
+    a_t = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a_t), 1e-12)) * (i * u)
+    return a_t, b_t
+
+
+def rglru_scan(a, b, h0=None, chunk: int = 512):
+    """Linear recurrence h = a*h_prev + b via chunked associative scan.
+
+    Outer lax.scan over chunks (checkpointed body) + inner associative
+    scan: the log-depth associative-scan intermediates and bwd residuals
+    then live only per-chunk instead of across the full (B,S,w) tensor —
+    recurrentgemma-9b train_4k peak 43.6 -> <16 GiB/chip (§Perf). Griffin's
+    TPU implementation makes the same trade (linear scan over blocks).
+    a, b: (B,S,w).
+    """
+    B, S, w = a.shape
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    Sp = nc * Q
+    if Sp != S:
+        a = jnp.pad(a, [(0, 0), (0, Sp - S), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, Sp - S), (0, 0)])
+    ac = jnp.moveaxis(a.reshape(B, nc, Q, w), 1, 0)
+    bc = jnp.moveaxis(b.reshape(B, nc, Q, w), 1, 0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, xs):
+        aq, bq = xs                                   # (B,Q,w)
+        bq = bq.at[:, 0].add(aq[:, 0] * h)
+        _, hq = jax.lax.associative_scan(combine, (aq, bq), axis=1)
+        return hq[:, -1], hq
+
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_step),
+                         jnp.zeros((B, w), a.dtype), (ac, bc))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, Sp, w)[:, :S]
+
+
+def rglru_fused(p, u, h0=None, chunk: int = 512):
+    """Gates + recurrence fused per chunk: the full-length fp32 (B,S,w)
+    gate tensors never materialize — only (B,Q,w) per chunk inside the
+    checkpointed body (bwd recomputes the gate matmuls per chunk)."""
+    B, S, w = u.shape
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    Sp = nc * Q
+    if Sp != S:
+        u = jnp.pad(u, [(0, 0), (0, Sp - S), (0, 0)])
+    uc = jnp.moveaxis(u.reshape(B, nc, Q, w), 1, 0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, uq):
+        aq, bq = _gates(p, uq.astype(jnp.float32))
+        bq = bq.at[:, 0].add(aq[:, 0] * h)
+        _, hq = jax.lax.associative_scan(combine, (aq, bq), axis=1)
+        return hq[:, -1], hq
+
+    h_init = (jnp.zeros((B, w), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_step), h_init, uc)
+    return jnp.moveaxis(hs, 0, 1).reshape(B, Sp, w)[:, :S]
+
+
+def rglru_naive(a, b, h0=None):
+    B, S, w = a.shape
+    h = jnp.zeros((B, w), a.dtype) if h0 is None else h0
+
+    def step(h, xs):
+        a_t, b_t = xs
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0),
+                                   jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def apply_rglru(p, x, cfg, conv_state=None, h_state=None, decode=False):
+    """x: (B,S,d) -> (y, (conv_state, h_state))."""
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32))
+    u = x @ p["w_in"]
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    if decode:
+        a, b = _gates(p, u.astype(jnp.float32))
+        h = rglru_naive(a, b, h_state)
+    else:
+        h = rglru_fused(p, u, h_state)
+    new_h = h[:, -1]
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"], (new_conv, new_h)

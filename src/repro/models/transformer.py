@@ -1,0 +1,370 @@
+"""Unified transformer stack for every assigned architecture family.
+
+The stack is a list of *segments*; each segment is a repeating *pattern* of
+layer specs scanned `n_groups` times with `jax.lax.scan` (keeps HLO size
+independent of depth — critical for 48-layer 400B dry-runs), plus remat at
+group granularity. k-means centroid state for routing layers is threaded
+through the scan as xs/ys (functional state, no mutation).
+
+Layer kinds:
+  attn    norm -> self-attention (full|local|routing|local+routing) -> norm -> FFN
+  moe     same but FFN is the MoE layer
+  cross   norm -> cross-attention to image embeddings -> norm -> FFN (VLM)
+  ssd     norm -> mamba2 SSD mixer (no FFN; d_ff=0)
+  rglru   norm -> RG-LRU mixer -> norm -> FFN (Griffin block)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RoutingConfig, with_overrides
+from repro.core.attention import full_attention
+from repro.core.local import local_attention
+from repro.core.kmeans import KMeansState, init_kmeans
+from repro.core.routing import routed_attention
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str                 # attn | moe | cross | ssd | rglru
+    attn: str = "full"        # attention backend for attn/moe/cross
+
+
+# ---------------------------------------------------------------------------
+# Segment construction
+# ---------------------------------------------------------------------------
+def _downgrade(attn: str) -> str:
+    return {"local+routing": "local", "routing": "local"}.get(attn, attn)
+
+
+def per_layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    Lr = cfg.num_layers
+    rl = set(cfg.routing.routing_layers)
+
+    def attn_mode(i):
+        if not rl or i in rl:
+            return cfg.attention
+        return _downgrade(cfg.attention)
+
+    specs = []
+    for i in range(Lr):
+        if cfg.family == "ssm":
+            specs.append(LayerSpec("ssd"))
+        elif cfg.family == "hybrid":
+            pat = cfg.hybrid_pattern or ("rglru", "rglru", "attn")
+            kind = pat[i % len(pat)]
+            specs.append(LayerSpec(kind, attn_mode(i) if kind == "attn"
+                                   else "full"))
+        elif cfg.family == "moe":
+            kind = "moe" if i % cfg.moe_interleave == 0 else "attn"
+            specs.append(LayerSpec(kind, attn_mode(i)))
+        elif cfg.family == "vlm":
+            kind = "cross" if (i + 1) % 5 == 0 else "attn"
+            specs.append(LayerSpec(kind, attn_mode(i)))
+        else:  # dense / encoder
+            specs.append(LayerSpec("attn", attn_mode(i)))
+    return specs
+
+
+def build_segments(cfg: ModelConfig) -> List[Tuple[Tuple[LayerSpec, ...], int]]:
+    """Compress the per-layer spec list into (pattern, n_groups) segments."""
+    specs = per_layer_specs(cfg)
+    period = {"moe": cfg.moe_interleave, "vlm": 5,
+              "hybrid": len(cfg.hybrid_pattern or ("rglru", "rglru", "attn"))
+              }.get(cfg.family, 1)
+    segments: List[Tuple[Tuple[LayerSpec, ...], int]] = []
+    i = 0
+    while i < len(specs):
+        # longest run of repeats of specs[i:i+period]
+        pat = tuple(specs[i:i + period])
+        g = 0
+        while (i + (g + 1) * len(pat) <= len(specs)
+               and tuple(specs[i + g * len(pat):i + (g + 1) * len(pat)]) == pat):
+            g += 1
+        if g == 0:                       # tail shorter than period
+            pat = tuple(specs[i:])
+            g = 1
+        segments.append((pat, g))
+        i += g * len(pat)
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Head split for local+routing (paper: half local, half routing)
+# ---------------------------------------------------------------------------
+def head_split(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """Returns (H_local, H_routing, Hkv_local, Hkv_routing)."""
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    g = H // Hkv
+    Hr = min(cfg.routing.routing_heads or H // 2, H)
+    Hl = H - Hr
+    if Hkv == 1:
+        return Hl, Hr, 1, 1
+    assert Hr % g == 0 and Hl % g == 0, (
+        f"routing head split {Hl}/{Hr} must align with GQA groups g={g}")
+    return Hl, Hr, Hl // g, Hr // g
+
+
+def _expand_kv(x: jax.Array, reps: int) -> jax.Array:
+    return jnp.repeat(x, reps, axis=1) if reps > 1 else x
+
+
+# ---------------------------------------------------------------------------
+# Layer init
+# ---------------------------------------------------------------------------
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: Dict[str, Any] = {"ln1": L.init_norm(cfg.d_model, cfg.norm, dt)}
+    if spec.kind in ("attn", "moe", "cross"):
+        p["attn"] = L.init_attn_proj(ks[0], cfg)
+        p["ln2"] = L.init_norm(cfg.d_model, cfg.norm, dt)
+        if spec.kind == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+        if spec.kind == "cross":
+            p["xgate_attn"] = jnp.zeros((), jnp.float32)
+            p["xgate_ffn"] = jnp.zeros((), jnp.float32)
+    elif spec.kind == "ssd":
+        p["mixer"] = ssm_mod.init_ssd(ks[0], cfg)
+    elif spec.kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg)
+        p["ln2"] = L.init_norm(cfg.d_model, cfg.norm, dt)
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def layer_kstate(key, spec: LayerSpec, cfg: ModelConfig):
+    """Centroid state for a layer, or None if no routing heads."""
+    if spec.kind not in ("attn", "moe", "cross") or "routing" not in spec.attn:
+        return None
+    if spec.attn == "routing":
+        Hr = cfg.num_heads
+    else:
+        _, Hr, _, _ = head_split(cfg)
+    return init_kmeans(key, Hr, cfg.routing.num_clusters, cfg.head_dim_).mu
+
+
+# ---------------------------------------------------------------------------
+# Attention dispatch
+# ---------------------------------------------------------------------------
+def _routing_cfg(cfg: ModelConfig) -> RoutingConfig:
+    rc = cfg.routing
+    if rc.causal != cfg.is_causal:
+        rc = with_overrides(rc, causal=cfg.is_causal)
+    if not cfg.is_causal and rc.share_qk:
+        rc = with_overrides(rc, share_qk=False)
+    return rc
+
+
+def self_attention(p, h, cfg: ModelConfig, mode: str, kmu,
+                   positions, pad_mask, update_state, impl="xla"):
+    """h: (B,N,d) -> ((B,N,d), new_kmu)."""
+    B, N, _ = h.shape
+    q, k, v = L.qkv_project(p, h, cfg, positions, rope=False)
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    g = H // Hkv
+    causal = cfg.is_causal
+    chunk = cfg.attn_chunk or (1024 if N > 4096 else 0)
+
+    def roped(qq, kk):
+        if cfg.position != "rope":
+            return qq, kk
+        pos = positions if positions is not None else \
+            jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+        return (L.apply_rope(qq, pos, cfg.rope_theta),
+                L.apply_rope(kk, pos, cfg.rope_theta))
+
+    new_kmu = kmu
+    if mode == "full":
+        qr, kr = roped(q, k)
+        o = full_attention(qr, kr, v, causal, pad_mask, chunk=chunk)
+    elif mode == "local":
+        qr, kr = roped(q, k)
+        o = local_attention(qr, kr, v, cfg.attn_window, causal, pad_mask)
+    elif mode == "routing":
+        rc = _routing_cfg(cfg)
+        v_e = _expand_kv(v, g)
+        k_in = None if (rc.share_qk and causal) else _expand_kv(k, g)
+        ro = routed_attention(q, k_in, v_e, KMeansState(mu=kmu), rc,
+                              positions, pad_mask, update_state, impl=impl)
+        o, new_kmu = ro.out, ro.state.mu
+    elif mode == "local+routing":
+        Hl, Hr, kvl, kvr = head_split(cfg)
+        if Hr == 0:                      # degenerate splits (Table 1 edges)
+            return self_attention(p, h, cfg, "local", kmu, positions,
+                                  pad_mask, update_state, impl)
+        if Hl == 0:
+            return self_attention(p, h, cfg, "routing", kmu, positions,
+                                  pad_mask, update_state, impl)
+        rc = _routing_cfg(cfg)
+        if Hkv == 1:
+            kl = kr_ = k
+            vl = vr_ = v
+        else:
+            kl, kr_ = k[:, :kvl], k[:, kvl:]
+            vl, vr_ = v[:, :kvl], v[:, kvl:]
+        ql, kl_r = roped(q[:, :Hl], kl)
+        o_l = local_attention(ql, kl_r, vl, cfg.routing.local_window,
+                              causal, pad_mask)
+        v_e = _expand_kv(vr_, Hr // vr_.shape[1])
+        k_in = None if (rc.share_qk and causal) else \
+            _expand_kv(kr_, Hr // kr_.shape[1])
+        ro = routed_attention(q[:, Hl:], k_in, v_e, KMeansState(mu=kmu), rc,
+                              positions, pad_mask, update_state, impl=impl)
+        o = jnp.concatenate([o_l, ro.out], axis=1)
+        new_kmu = ro.state.mu
+    else:
+        raise ValueError(f"unknown attention mode {mode}")
+    return L.out_project(p, o), new_kmu
+
+
+def cross_attention(p, h, image_embeds, cfg: ModelConfig, pad_mask=None):
+    """Text queries attend to image tokens (no causal mask, no rope)."""
+    B, N, _ = h.shape
+    q, _, _ = L.qkv_project(p, h, cfg, rope=False)
+    dh, Hkv = cfg.head_dim_, cfg.num_kv_heads
+    M = image_embeds.shape[1]
+    k = (image_embeds @ p["wk"]).reshape(B, M, Hkv, dh).transpose(0, 2, 1, 3)
+    v = (image_embeds @ p["wv"]).reshape(B, M, Hkv, dh).transpose(0, 2, 1, 3)
+    o = full_attention(q, k, v, causal=False)
+    return L.out_project(p, o)
+
+
+# ---------------------------------------------------------------------------
+# Layer apply
+# ---------------------------------------------------------------------------
+def _dropout(x, rate, rng):
+    if rng is None or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)
+
+
+def apply_layer(spec: LayerSpec, p, kmu, x, cfg: ModelConfig, *,
+                positions=None, pad_mask=None, image_embeds=None,
+                update_state=True, impl="xla", moe_impl="einsum",
+                drop_rng=None):
+    aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    new_kmu = kmu
+    rngs = (jax.random.split(drop_rng, 2) if drop_rng is not None
+            else (None, None))
+    if spec.kind in ("attn", "moe", "cross"):
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        if spec.kind == "cross":
+            a = cross_attention(p["attn"], h, image_embeds, cfg)
+            a = a * jnp.tanh(p["xgate_attn"]).astype(a.dtype)
+        else:
+            a, new_kmu = self_attention(p["attn"], h, cfg, spec.attn, kmu,
+                                        positions, pad_mask, update_state,
+                                        impl)
+        x = x + _dropout(a, cfg.dropout, rngs[0])
+        h2 = L.apply_norm(p["ln2"], x, cfg.norm)
+        if spec.kind == "moe":
+            ff, moe_aux = moe_mod.apply_moe(p["ffn"], h2, cfg, impl=moe_impl)
+            aux.update({k: jnp.asarray(v, jnp.float32)
+                        for k, v in moe_aux.items()})
+        else:
+            ff = L.apply_mlp(p["ffn"], h2, cfg.act)
+            if spec.kind == "cross":
+                ff = ff * jnp.tanh(p["xgate_ffn"]).astype(ff.dtype)
+        x = x + _dropout(ff, cfg.dropout, rngs[1])
+    elif spec.kind == "ssd":
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        y, _ = ssm_mod.apply_ssd(p["mixer"], h, cfg)
+        x = x + y
+    elif spec.kind == "rglru":
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        y, _ = rglru_mod.apply_rglru(p["mixer"], h, cfg)
+        x = x + y
+        h2 = L.apply_norm(p["ln2"], x, cfg.norm)
+        x = x + _dropout(L.apply_mlp(p["ffn"], h2, cfg.act), cfg.dropout,
+                         rngs[1])
+    return x, new_kmu, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack init / apply (scan over segment groups)
+# ---------------------------------------------------------------------------
+def init_stack(key, cfg: ModelConfig):
+    segments = build_segments(cfg)
+    seg_params, seg_kstate = [], []
+    for si, (pattern, G) in enumerate(segments):
+        key, sk = jax.random.split(key)
+        gkeys = jax.random.split(sk, G)
+
+        def init_group(k, pattern=pattern):
+            ks = jax.random.split(k, 2 * len(pattern))
+            params = tuple(init_layer(ks[2 * i], s, cfg)
+                           for i, s in enumerate(pattern))
+            kst = {str(i): layer_kstate(ks[2 * i + 1], s, cfg)
+                   for i, s in enumerate(pattern)
+                   if layer_kstate(ks[2 * i + 1], s, cfg) is not None}
+            return params, kst
+
+        params, kst = jax.vmap(init_group)(gkeys)
+        seg_params.append(params)
+        seg_kstate.append(kst)
+    return seg_params, seg_kstate
+
+
+def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
+                positions=None, pad_mask=None, image_embeds=None,
+                update_state=True, impl="xla", moe_impl="einsum",
+                remat="none", drop_rng=None,
+                constrain_fn: Optional[Callable] = None):
+    segments = build_segments(cfg)
+    aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    new_seg_kstate = []
+    constrain = constrain_fn or (lambda t: t)
+    layer_counter = 0
+    for si, (pattern, G) in enumerate(segments):
+
+        def group_fn(x, xs, pattern=pattern, base=layer_counter):
+            p_group, k_group, gi = xs
+            aux_g = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+            new_k = {}
+            for i, spec in enumerate(pattern):
+                rng_i = None
+                if drop_rng is not None and cfg.dropout > 0:
+                    rng_i = jax.random.fold_in(
+                        jax.random.fold_in(drop_rng, base + i), gi)
+                x, nk, aux_i = apply_layer(
+                    spec, p_group[i], k_group.get(str(i)), x, cfg,
+                    positions=positions, pad_mask=pad_mask,
+                    image_embeds=image_embeds, update_state=update_state,
+                    impl=impl, moe_impl=moe_impl, drop_rng=rng_i)
+                if str(i) in k_group:
+                    new_k[str(i)] = nk
+                aux_g = {k: aux_g[k] + aux_i[k] for k in AUX_KEYS}
+            return constrain(x), new_k, aux_g
+
+        if remat == "full":
+            group_fn = jax.checkpoint(group_fn, static_argnums=())
+        elif remat == "save_dots":
+            group_fn = jax.checkpoint(
+                group_fn,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        def scan_body(carry, xs):
+            x, aux = carry
+            x, new_k, aux_g = group_fn(x, xs)
+            aux = {k: aux[k] + aux_g[k] for k in AUX_KEYS}
+            return (x, aux), new_k
+
+        xs = (seg_params[si], seg_kstate[si], jnp.arange(G))
+        (x, aux_tot), new_k = jax.lax.scan(scan_body, (x, aux_tot), xs)
+        new_seg_kstate.append(new_k)
+        layer_counter += G * len(pattern)
+    return x, new_seg_kstate, aux_tot

@@ -1,0 +1,12 @@
+from repro.optim.adam import adam
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import make_schedule
+
+
+def make_optimizer(tc):
+    """tc: TrainConfig -> (init_fn, update_fn) pair."""
+    if tc.optimizer == "adam":
+        return adam(tc.betas[0], tc.betas[1], tc.eps, tc.weight_decay)
+    if tc.optimizer == "adafactor":
+        return adafactor()
+    raise ValueError(f"unknown optimizer {tc.optimizer}")

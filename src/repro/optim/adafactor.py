@@ -1,0 +1,70 @@
+"""Adafactor (Shazeer & Stern 2018) — the paper's PG-19 optimizer.
+
+Sublinear memory: second moments of >=2D params are factored into row/col
+statistics; 1D params keep full statistics. Relative step sizes (update
+scaled by RMS(param)), RMS-1 update clipping, beta2 schedule 1 - t^-0.8,
+no momentum. This is what makes the 400B maverick config fit v5e HBM
+(see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS1 = 1e-30
+_EPS2 = 1e-3
+_CLIP = 1.0
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor(min_dim_size_to_factor: int = 32):
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"vr": row, "vc": col}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"stats": jax.tree.map(one, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + _EPS1
+            if _factored(p.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(-2)
+                # V-hat = vr vc / mean(vr)  (Shazeer-Stern eq. 4-6)
+                r = vr / jnp.maximum(vr.mean(-1, keepdims=True), _EPS1)
+                u = g32 * jax.lax.rsqrt(r[..., None] * vc[..., None, :]
+                                        + _EPS1)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(v + _EPS1)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + _EPS1)
+            u = u / jnp.maximum(1.0, rms_u / _CLIP)
+            scale = jnp.maximum(
+                jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), _EPS2)
+            new_p = (p.astype(jnp.float32) - lr * scale * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state["stats"])
+        out = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, {"stats": new_s, "count": count}
+
+    return init, update

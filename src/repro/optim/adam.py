@@ -1,0 +1,49 @@
+"""Adam (Kingma & Ba 2015) — the paper's optimizer for all LMs but PG-19.
+
+Functional optax-style API: `init(params) -> state`, `update(grads, state,
+params, lr) -> (new_params, new_state)`. Moments are fp32 regardless of
+param dtype (params may be bf16: the update is computed in fp32 and cast
+back — for very large models pair with adafactor instead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam(b1=0.9, b2=0.98, eps=1e-9, weight_decay=0.0):
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / bc1
+            vh = v / bc2
+            step = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m, v
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        mflat = treedef.flatten_up_to(state["m"])
+        vflat = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return init, update

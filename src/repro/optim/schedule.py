@@ -1,0 +1,32 @@
+"""LR schedules. The paper uses the Vaswani rsqrt schedule for Adam runs and
+linear-warmup + rsqrt-normalized-decay with a 0.01 constant for PG-19."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(tc, d_model: int = 512):
+    w = float(max(tc.warmup_steps, 1))
+
+    def vaswani(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return (d_model ** -0.5) * jnp.minimum(t ** -0.5, t * w ** -1.5)
+
+    def linear_warmup_rsqrt(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = jnp.minimum(1.0, t / w)
+        # rsqrt_normalized_decay: flat through warmup then ~1/sqrt(t/w)
+        decay = jnp.sqrt(w / jnp.maximum(t, w))
+        return tc.lr * warm * decay
+
+    def const(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return tc.lr * jnp.minimum(1.0, t / w)
+
+    if tc.schedule == "vaswani":
+        return vaswani
+    if tc.schedule == "linear_warmup_rsqrt":
+        return linear_warmup_rsqrt
+    if tc.schedule == "const":
+        return const
+    raise ValueError(f"unknown schedule {tc.schedule}")

@@ -1,0 +1,439 @@
+"""Serving: KV caches, prefill, and single-token decode for every family.
+
+Cache layouts (per segment, stacked over scan groups G):
+  full attention    k/v: (G,B,Hkv,S,dh) append-at-position
+  local attention   ring of 2W slots + stored absolute positions — decode
+                    reproduces the *blocked* training semantics exactly
+                    (query attends blocks b, b-1)
+  routing heads     cluster-paged cache (beyond-paper serving design):
+                    pages (G,B,Hr,kc,cap,dh) hold the normalized shared-QK
+                    routing vectors + values per centroid; a decoded token is
+                    routed to its argmax centroid and attends only that page
+                    via take-along-cluster — O(cap . d) per step, no dynamic
+                    gather over the full context. Ring-overwrite per page
+                    bounds memory for 500k-token decode.
+  ssd / rglru       recurrent state (+ causal-conv tail)
+  cross             static image K/V computed at prefill
+
+Decode-vs-train semantics: full/local/ssd/rglru decode match teacher-forced
+training exactly (tested); routing decode uses argmax-cluster membership
+(training uses balanced per-centroid top-k), the designed serving adaptation
+— see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import full_attention
+from repro.core.kmeans import normalize_routing
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import (build_segments, head_split,
+                                      _expand_kv, _routing_cfg)
+
+_BIG_NEG = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+def _routing_dims(cfg: ModelConfig, max_len: int) -> Tuple[int, int]:
+    kc = cfg.routing.num_clusters
+    cap = cfg.routing.window or max(1, max_len // kc)
+    return kc, cap
+
+
+def _slot_cache(spec, cfg: ModelConfig, B: int, max_len: int, dt):
+    dh, Hkv = cfg.head_dim_, cfg.num_kv_heads
+    if spec.kind == "ssd":
+        s = ssm_mod.ssm_spec(cfg)
+        conv_ch = s.d_inner + 2 * s.nstate
+        return {"conv": jnp.zeros((B, s.conv - 1, conv_ch), dt),
+                "state": jnp.zeros((B, s.nheads, s.nstate, s.headdim),
+                                   jnp.float32)}
+    if spec.kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return {"conv": jnp.zeros((B, 3, w), dt),
+                "h": jnp.zeros((B, w), jnp.float32)}
+    if spec.kind == "cross":
+        M = cfg.num_image_tokens
+        return {"k": jnp.zeros((B, Hkv, M, dh), dt),
+                "v": jnp.zeros((B, Hkv, M, dh), dt)}
+    # self-attention caches
+    c: Dict[str, Any] = {}
+    mode = spec.attn
+    if mode == "full":
+        c["k"] = jnp.zeros((B, Hkv, max_len, dh), dt)
+        c["v"] = jnp.zeros((B, Hkv, max_len, dh), dt)
+    elif mode in ("local", "local+routing"):
+        W = (cfg.routing.local_window if mode == "local+routing"
+             else cfg.attn_window)
+        kvl = head_split(cfg)[2] if mode == "local+routing" else Hkv
+        c["lk"] = jnp.zeros((B, kvl, 2 * W, dh), dt)
+        c["lv"] = jnp.zeros((B, kvl, 2 * W, dh), dt)
+        c["lpos"] = jnp.full((B, 2 * W), -1, jnp.int32)
+    if mode in ("routing", "local+routing"):
+        Hr = cfg.num_heads if mode == "routing" else head_split(cfg)[1]
+        kc, cap = _routing_dims(cfg, max_len)
+        c["rk"] = jnp.zeros((B, Hr, kc, cap, dh), dt)
+        c["rv"] = jnp.zeros((B, Hr, kc, cap, dh), dt)
+        c["rlen"] = jnp.zeros((B, Hr, kc), jnp.int32)
+    return c
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    segs = build_segments(cfg)
+    out = []
+    for pattern, G in segs:
+        slot = {str(i): _slot_cache(s, cfg, B, max_len, dt)
+                for i, s in enumerate(pattern)}
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), slot))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention primitives
+# ---------------------------------------------------------------------------
+def _decode_full(cache, q, k_new, v_new, pos):
+    """q:(B,H,1,dh) roped; k/v_new:(B,Hkv,1,dh); pos:(B,) write index."""
+    B, Hkv = k_new.shape[0], k_new.shape[1]
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hkv)[None, :]
+    ck = cache["k"].at[bi, hi, pos[:, None]].set(k_new[:, :, 0])
+    cv = cache["v"].at[bi, hi, pos[:, None]].set(v_new[:, :, 0])
+    o = full_attention(q, ck, cv, causal=True, positions=pos[:, None])
+    return o, {**cache, "k": ck, "v": cv}
+
+
+def _decode_local(cache, q, k_new, v_new, pos, window):
+    """Blocked-local decode: attend keys with kpos in blocks b-1, b."""
+    B, Hkv = k_new.shape[0], k_new.shape[1]
+    S2 = cache["lk"].shape[2]              # 2W ring
+    slot = pos % S2
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hkv)[None, :]
+    ck = cache["lk"].at[bi, hi, slot[:, None]].set(k_new[:, :, 0])
+    cv = cache["lv"].at[bi, hi, slot[:, None]].set(v_new[:, :, 0])
+    cp = cache["lpos"].at[jnp.arange(B), slot].set(pos)
+    lo = (pos // window - 1) * window      # start of block b-1
+    valid = (cp >= jnp.maximum(lo, 0)[:, None]) & (cp >= 0) & \
+            (cp <= pos[:, None])
+    o = full_attention(q, ck, cv, causal=False, pad_mask=valid)
+    return o, {**cache, "lk": ck, "lv": cv, "lpos": cp}
+
+
+def _decode_routing(cache, q, v_new, pos, cfg):
+    """Cluster-paged routing decode. q:(B,Hr,1,dh) unroped; v:(B,Hr,1,dh)."""
+    mu = cache["_mu"]                      # (Hr,kc,dh) injected by caller
+    B, Hr, _, dh = q.shape
+    kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
+    r = normalize_routing(q)[:, :, 0]      # (B,Hr,dh)
+    scores = jnp.einsum("bhd,hkd->bhk", r.astype(jnp.float32),
+                        mu.astype(jnp.float32))
+    c = jnp.argmax(scores, axis=-1)        # (B,Hr)
+    sel = c[:, :, None, None, None]
+    page_k = jnp.take_along_axis(cache["rk"], sel, axis=2)[:, :, 0]
+    page_v = jnp.take_along_axis(cache["rv"], sel, axis=2)[:, :, 0]
+    plen = jnp.take_along_axis(cache["rlen"], c[:, :, None], axis=2)[..., 0]
+    nvalid = jnp.minimum(plen, cap)        # (B,Hr)
+    logits = jnp.einsum("bhd,bhcd->bhc", r, page_k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh)
+    slot_ok = jnp.arange(cap)[None, None, :] < nvalid[..., None]
+    logits = jnp.where(slot_ok, logits, _BIG_NEG)
+    self_logit = (jnp.einsum("bhd,bhd->bh", r, r) /
+                  jnp.sqrt(dh)).astype(jnp.float32)
+    all_logits = jnp.concatenate([logits, self_logit[..., None]], -1)
+    attn = jax.nn.softmax(all_logits, axis=-1)
+    vals = jnp.concatenate([page_v, v_new[:, :, 0][:, :, None, :]], 2)
+    o = jnp.einsum("bhc,bhcd->bhd", attn.astype(vals.dtype), vals)
+    # write r, v into the ring slot of page c
+    wslot = plen % cap
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hr)[None, :]
+    ck = cache["rk"].at[bi, hi, c, wslot].set(r.astype(cache["rk"].dtype))
+    cv = cache["rv"].at[bi, hi, c, wslot].set(
+        v_new[:, :, 0].astype(cache["rv"].dtype))
+    cl = cache["rlen"].at[bi, hi, c].set(plen + 1)
+    out = {k: v for k, v in cache.items() if k != "_mu"}
+    return o[:, :, None, :], {**out, "rk": ck, "rv": cv, "rlen": cl}
+
+
+def _decode_self_attn(p, h, cfg, mode, kmu, cache, pos):
+    """h: (B,1,d) -> (out (B,1,d), new_cache)."""
+    B = h.shape[0]
+    q, k, v = L.qkv_project(p, h, cfg, rope=False)
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    g = H // Hkv
+
+    def roped(qq, kk):
+        if cfg.position != "rope":
+            return qq, kk
+        return (L.apply_rope(qq, pos[:, None], cfg.rope_theta),
+                L.apply_rope(kk, pos[:, None], cfg.rope_theta))
+
+    if mode == "full":
+        qr, kr = roped(q, k)
+        o, cache = _decode_full(cache, qr, kr, v, pos)
+    elif mode == "local":
+        qr, kr = roped(q, k)
+        o, cache = _decode_local(cache, qr, kr, v, pos, cfg.attn_window)
+    elif mode == "routing":
+        v_e = _expand_kv(v, g)
+        o, cache = _decode_routing({**cache, "_mu": kmu}, q, v_e, pos, cfg)
+    elif mode == "local+routing":
+        Hl, Hr, kvl, kvr = head_split(cfg)
+        if Hkv == 1:
+            kl, vl, vr_ = k, v, v
+        else:
+            kl, vl, vr_ = k[:, :kvl], v[:, :kvl], v[:, kvl:]
+        ql, klr = roped(q[:, :Hl], kl)
+        o_l, lc = _decode_local(
+            {"lk": cache["lk"], "lv": cache["lv"], "lpos": cache["lpos"]},
+            ql, klr, vl, pos, cfg.routing.local_window)
+        v_e = _expand_kv(vr_, Hr // vr_.shape[1])
+        rc_in = {k2: cache[k2] for k2 in ("rk", "rv", "rlen")}
+        o_r, rc = _decode_routing({**rc_in, "_mu": kmu}, q[:, Hl:], v_e,
+                                  pos, cfg)
+        o = jnp.concatenate([o_l, o_r], axis=1)
+        cache = {**lc, **rc}
+    else:
+        raise ValueError(mode)
+    return L.out_project(p, o), cache
+
+
+def _decode_layer(spec, p, kmu, cache, x, cfg, pos, image_embeds=None):
+    if spec.kind in ("attn", "moe", "cross"):
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        if spec.kind == "cross":
+            q, _, _ = L.qkv_project(p["attn"], h, cfg, rope=False)
+            o = full_attention(q, cache["k"], cache["v"], causal=False)
+            a = L.out_project(p["attn"], o)
+            a = a * jnp.tanh(p["xgate_attn"]).astype(a.dtype)
+        else:
+            a, cache = _decode_self_attn(p["attn"], h, cfg, spec.attn, kmu,
+                                         cache, pos)
+        x = x + a
+        h2 = L.apply_norm(p["ln2"], x, cfg.norm)
+        if spec.kind == "moe":
+            ff, _ = moe_mod.apply_moe(p["ffn"], h2, cfg, impl="scatter")
+        else:
+            ff = L.apply_mlp(p["ffn"], h2, cfg.act)
+            if spec.kind == "cross":
+                ff = ff * jnp.tanh(p["xgate_ffn"]).astype(ff.dtype)
+        x = x + ff
+    elif spec.kind == "ssd":
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        y, (nc, ns) = ssm_mod.apply_ssd(p["mixer"], h, cfg,
+                                        conv_state=cache["conv"],
+                                        ssm_state=cache["state"],
+                                        decode=True)
+        cache = {"conv": nc, "state": ns}
+        x = x + y
+    elif spec.kind == "rglru":
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        y, (nc, nh) = rglru_mod.apply_rglru(p["mixer"], h, cfg,
+                                            conv_state=cache["conv"],
+                                            h_state=cache["h"], decode=True)
+        cache = {"conv": nc, "h": nh}
+        x = x + y
+        h2 = L.apply_norm(p["ln2"], x, cfg.norm)
+        x = x + L.apply_mlp(p["ffn"], h2, cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# serve_step: one token for the whole stack
+# ---------------------------------------------------------------------------
+def make_serve_step(cfg: ModelConfig):
+    segments = build_segments(cfg)
+
+    def serve_step(params, kstate, cache, tokens, pos):
+        """tokens: (B,) int32; pos: (B,) int32 -> (logits (B,V), new_cache)."""
+        x = L.embed(params["embed"], tokens[:, None])
+        new_cache = []
+        for si, (pattern, G) in enumerate(segments):
+            def group_fn(x, xs, pattern=pattern):
+                p_group, k_group, c_group = xs
+                new_c = {}
+                for i, spec in enumerate(pattern):
+                    x, nc = _decode_layer(spec, p_group[i],
+                                          k_group.get(str(i)),
+                                          c_group[str(i)], x, cfg, pos)
+                    new_c[str(i)] = nc
+                return x, new_c
+
+            xs = (params["stack"][si], kstate[si], cache[si])
+            x, nc = jax.lax.scan(lambda c, xs: group_fn(c, xs), x, xs)
+            new_cache.append(nc)
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.logits_out(params["embed"], x, cfg.tie_embeddings,
+                              cfg.logit_softcap)
+        from repro.models.model import mask_vocab_pad
+        return mask_vocab_pad(logits, cfg)[:, 0], new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also fills the caches
+# ---------------------------------------------------------------------------
+def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions):
+    """Build one layer's cache from prefix activations h (B,N,d)."""
+    B, N, _ = h.shape
+    q, k, v = L.qkv_project(p["attn"], h, cfg, rope=False)
+    mode = spec.attn
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    g = H // Hkv
+
+    def roped_k(kk):
+        if cfg.position != "rope":
+            return kk
+        return L.apply_rope(kk, positions, cfg.rope_theta)
+
+    out = dict(cache)
+    if mode == "full":
+        kr = roped_k(k)
+        out["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kr.astype(cache["k"].dtype), (0, 0, 0, 0))
+        out["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        return out
+    if mode in ("local", "local+routing"):
+        W = (cfg.routing.local_window if mode == "local+routing"
+             else cfg.attn_window)
+        kvl = head_split(cfg)[2] if mode == "local+routing" else Hkv
+        kl = roped_k(k[:, :kvl] if (mode == "local+routing" and Hkv > 1)
+                     else k)
+        vl = v[:, :kvl] if (mode == "local+routing" and Hkv > 1) else v
+        S2 = 2 * W
+        # place token t at ring slot t % S2; keep the last S2 tokens
+        take = min(N, S2)
+        tail_k = kl[:, :, -take:]
+        tail_v = vl[:, :, -take:]
+        tail_pos = positions[:, -take:]
+        slots = tail_pos % S2                              # (B,take)
+        bi = jnp.arange(B)[:, None, None]
+        hi = jnp.arange(tail_k.shape[1])[None, :, None]
+        si = slots[:, None, :]
+        out["lk"] = cache["lk"].at[bi, hi, si].set(
+            tail_k.astype(cache["lk"].dtype))
+        out["lv"] = cache["lv"].at[bi, hi, si].set(
+            tail_v.astype(cache["lv"].dtype))
+        out["lpos"] = cache["lpos"].at[jnp.arange(B)[:, None], slots].set(
+            tail_pos)
+    if mode in ("routing", "local+routing"):
+        Hr = cfg.num_heads if mode == "routing" else head_split(cfg)[1]
+        qr = q if mode == "routing" else q[:, -Hr:]
+        if mode == "routing":
+            vr = _expand_kv(v, g)
+        else:
+            kvl = head_split(cfg)[2]
+            vr_kv = v if Hkv == 1 else v[:, kvl:]
+            vr = _expand_kv(vr_kv, Hr // vr_kv.shape[1])
+        r = normalize_routing(qr)                          # (B,Hr,N,dh)
+        kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
+        scores = jnp.einsum("bhnd,hkd->bhnk", r.astype(jnp.float32),
+                            kmu.astype(jnp.float32))
+        assign = jnp.argmax(scores, -1)                    # (B,Hr,N)
+        # keep the most recent `cap` tokens per cluster
+        memb = jax.nn.one_hot(assign, kc, dtype=jnp.int32)   # (B,Hr,N,kc)
+        rank_from_end = jnp.cumsum(memb[:, :, ::-1], axis=2)[:, :, ::-1]
+        rank_from_end = (rank_from_end * memb).max(-1)     # (B,Hr,N) 1-based
+        keep = (rank_from_end >= 1) & (rank_from_end <= cap)
+        slot_of_tok = jnp.where(keep, (rank_from_end - 1), 0)
+        counts = memb.sum(2)                               # (B,Hr,kc)
+        # scatter kept tokens into pages; slot = (count - rank) % cap, the
+        # slot sequential decode would have used (ring continuity)
+        sel_cluster = assign
+        write_slot = jnp.where(
+            keep,
+            (jnp.take_along_axis(counts, sel_cluster, axis=2) % cap
+             - rank_from_end) % cap,
+            cap)                                           # cap = trash
+        bi = jnp.arange(B)[:, None, None]
+        hi = jnp.arange(Hr)[None, :, None]
+        rk_pad = jnp.concatenate(
+            [cache["rk"], jnp.zeros_like(cache["rk"][:, :, :, :1])], 3)
+        rv_pad = jnp.concatenate(
+            [cache["rv"], jnp.zeros_like(cache["rv"][:, :, :, :1])], 3)
+        rk_pad = rk_pad.at[bi, hi, sel_cluster, write_slot].set(
+            r.astype(rk_pad.dtype))
+        rv_pad = rv_pad.at[bi, hi, sel_cluster, write_slot].set(
+            vr.astype(rv_pad.dtype))
+        out["rk"] = rk_pad[:, :, :, :cap]
+        out["rv"] = rv_pad[:, :, :, :cap]
+        out["rlen"] = counts
+    return out
+
+
+def prefill(params, kstate, cache, batch, cfg: ModelConfig):
+    """Forward over the prefix, returning (logits, filled_cache).
+
+    Runs the standard stack forward; caches are filled per layer from the
+    layer inputs (python loop over segments, scan over groups).
+    """
+    from repro.models.transformer import apply_layer
+    segments = build_segments(cfg)
+    B, N = batch["tokens"].shape
+    positions = batch.get(
+        "positions", jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N)))
+    x = L.embed(params["embed"], batch["tokens"])
+    new_cache = []
+    for si, (pattern, G) in enumerate(segments):
+        def group_fn(x, xs, pattern=pattern):
+            p_group, k_group, c_group = xs
+            new_c = {}
+            for i, spec in enumerate(pattern):
+                c_i, p_i = c_group[str(i)], p_group[i]
+                if spec.kind in ("attn", "moe"):
+                    h = L.apply_norm(p_i["ln1"], x, cfg.norm)
+                    c_i = _fill_from_prefix(spec, cfg, c_i, h, p_i,
+                                            k_group.get(str(i)), positions)
+                elif spec.kind == "cross":
+                    img = batch["image_embeds"]
+                    dh, Hkv = cfg.head_dim_, cfg.num_kv_heads
+                    M = img.shape[1]
+                    c_i = {
+                        "k": (img @ p_i["attn"]["wk"]).reshape(
+                            B, M, Hkv, dh).transpose(0, 2, 1, 3),
+                        "v": (img @ p_i["attn"]["wv"]).reshape(
+                            B, M, Hkv, dh).transpose(0, 2, 1, 3)}
+                if spec.kind in ("ssd", "rglru"):
+                    h = L.apply_norm(p_i["ln1"], x, cfg.norm)
+                    if spec.kind == "ssd":
+                        y, (nc_, ns) = ssm_mod.apply_ssd(
+                            p_i["mixer"], h, cfg)
+                        c_i = {"conv": nc_, "state": ns}
+                    else:
+                        y, (nc_, nh) = rglru_mod.apply_rglru(
+                            p_i["mixer"], h, cfg)
+                        c_i = {"conv": nc_, "h": nh}
+                    x = x + y
+                    if spec.kind == "rglru":
+                        h2 = L.apply_norm(p_i["ln2"], x, cfg.norm)
+                        x = x + L.apply_mlp(p_i["ffn"], h2, cfg.act)
+                else:
+                    x, _, _ = apply_layer(
+                        spec, p_i, k_group.get(str(i)), x, cfg,
+                        positions=positions, pad_mask=batch.get("pad_mask"),
+                        image_embeds=batch.get("image_embeds"),
+                        update_state=False)
+                new_c[str(i)] = c_i
+            return x, new_c
+
+        xs = (params["stack"][si], kstate[si], cache[si])
+        x, nc = jax.lax.scan(lambda c, xs: group_fn(c, xs), x, xs)
+        new_cache.append(nc)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.logits_out(params["embed"], x, cfg.tie_embeddings,
+                          cfg.logit_softcap)
+    from repro.models.model import mask_vocab_pad
+    return mask_vocab_pad(logits, cfg), new_cache

@@ -1,0 +1,148 @@
+"""Training step: loss, grads, microbatch accumulation, optimizer update.
+
+`make_train_step(run)` returns a pure `(TrainState, batch) -> (TrainState,
+metrics)` suitable for jax.jit / pjit. The k-means routing state rides in
+TrainState and is refreshed from the forward pass (functional EMA).
+Gradient accumulation scans over microbatches (bounds activation memory on
+the train_4k cells); remat policy applies inside the model stack.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models.model import apply_model, lm_loss, next_token_batch
+from repro.optim import make_optimizer, make_schedule
+
+MOE_LB_COEF = 1e-2
+MOE_Z_COEF = 1e-3
+
+
+class TrainState(NamedTuple):
+    params: Any
+    kstate: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(run: RunConfig, key: jax.Array) -> TrainState:
+    from repro.models.model import init_model
+    params, kstate = init_model(run.model, key)
+    opt_init, _ = make_optimizer(run.train)
+    return TrainState(params, kstate, opt_init(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def make_loss_fn(run: RunConfig, impl="xla", moe_impl="einsum",
+                 constrain_fn: Optional[Callable] = None):
+    mc, tc = run.model, run.train
+
+    def loss_fn(params, kstate, batch, drop_rng):
+        if mc.family == "encoder":
+            inputs, targets = batch, batch["tokens"]
+            loss_mask = batch.get("mask_spans")
+        else:
+            inputs, targets = next_token_batch(batch)
+            loss_mask = None
+        logits, new_k, aux = apply_model(
+            params, kstate, inputs, mc, update_state=True, impl=impl,
+            moe_impl=moe_impl, remat=tc.remat, drop_rng=drop_rng,
+            constrain_fn=constrain_fn)
+        pad = inputs.get("pad_mask")
+        loss, metrics = lm_loss(logits, targets, pad, tc.z_loss, loss_mask)
+        if mc.family == "moe":
+            loss = (loss + MOE_LB_COEF * aux["moe_lb_loss"]
+                    + MOE_Z_COEF * aux["moe_z_loss"])
+        metrics = dict(metrics)
+        metrics.update({k: v for k, v in aux.items()})
+        metrics["loss"] = loss
+        return loss, (new_k, metrics)
+
+    return loss_fn
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, 0.0))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def make_train_step(run: RunConfig, impl="xla", moe_impl="einsum",
+                    constrain_fn: Optional[Callable] = None,
+                    grad_transform: Optional[Callable] = None,
+                    grad_constrain: Optional[Callable] = None):
+    """grad_transform: optional hook (e.g. gradient compression) applied to
+    the accumulated grads before clipping. grad_constrain: sharding
+    constraint pinning the fp32 accumulation buffers to the param layout
+    (without it GSPMD may replicate the scan carry — 13x memory on the
+    400B config, see EXPERIMENTS.md §Perf)."""
+    tc = run.train
+    loss_fn = make_loss_fn(run, impl, moe_impl, constrain_fn)
+    _, opt_update = make_optimizer(tc)
+    schedule = make_schedule(tc, run.model.d_model)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+    gc = grad_constrain or (lambda g: g)
+
+    def train_step(ts: TrainState, batch: Dict[str, jax.Array]):
+        drop_rng = (jax.random.fold_in(jax.random.PRNGKey(tc.seed), ts.step)
+                    if run.model.dropout > 0 else None)
+        A = tc.grad_accum
+        if A <= 1:
+            (loss, (new_k, metrics)), grads = vg(ts.params, ts.kstate, batch,
+                                                 drop_rng)
+            grads = gc(grads)
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]),
+                    b)
+
+            mb = micro(batch)
+
+            acc_dt = jnp.dtype(tc.accum_dtype)
+
+            def body(carry, xs):
+                grads_acc, kstate, _ = carry
+                (loss, (nk, metrics)), g = vg(ts.params, kstate, xs, drop_rng)
+                grads_acc = gc(jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), grads_acc, g))
+                return (grads_acc, nk, metrics), loss
+
+            zeros = gc(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), ts.params))
+            (gacc, new_k, metrics), losses = jax.lax.scan(
+                body, (zeros, ts.kstate,
+                       _zero_metrics(run)), mb)
+            grads = jax.tree.map(lambda g: (g / A).astype(jnp.float32)
+                                 if g.dtype == jnp.float32 else g / A, gacc)
+            loss = losses.mean()
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedule(ts.step + 1)
+        new_params, new_opt = opt_update(grads, ts.opt_state, ts.params, lr)
+        metrics["grad_norm"] = gn
+        metrics["lr"] = lr
+        return TrainState(new_params, new_k, new_opt, ts.step + 1), metrics
+
+    return train_step
+
+
+def _zero_metrics(run: RunConfig):
+    keys = ["nll", "tokens", "loss", "moe_lb_loss", "moe_z_loss",
+            "moe_drop_frac"]
+    if run.train.z_loss:
+        keys.append("z_loss")
+    return {k: jnp.zeros((), jnp.float32) for k in keys}

@@ -1,0 +1,125 @@
+"""Production training loop: checkpoint/restart, preemption, stragglers.
+
+Fault-tolerance contract:
+  * `Trainer.fit()` resumes from the latest complete checkpoint (atomic
+    rename commit — a torn save is invisible), restoring params/opt/kmeans
+    state, step counter AND the data-iterator cursor, so a killed-and-
+    restarted run produces the same step sequence as an uninterrupted one
+    (tested bit-exact in tests/test_ckpt.py).
+  * SIGTERM/SIGINT (preemption notice) triggers a final synchronous
+    checkpoint before exit — at most `ckpt_every` steps of work lost under
+    normal operation, ~0 steps under graceful preemption.
+  * Straggler mitigation: per-step wall times feed a rolling median; steps
+    slower than `straggler_factor` x median increment a counter and invoke
+    `on_straggler` (hook for re-balancing grad-accum microbatches or
+    alerting). On a real fleet this is fed per-host; here it is wired and
+    tested at the controller level.
+  * Elastic: `Trainer` takes the mesh as a constructor arg; restoring a
+    checkpoint saved on a different mesh re-shards via CheckpointManager.
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import RunConfig
+from repro.data.synthetic import SyntheticLoader
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, loader: SyntheticLoader,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 mesh=None, shardings=None, straggler_factor: float = 2.5,
+                 on_straggler: Optional[Callable[[int, float], None]] = None,
+                 async_ckpt: bool = True, step_fn=None):
+        self.run = run
+        self.loader = loader
+        self.mesh = mesh
+        self.ckpt_every = ckpt_every
+        self.async_ckpt = async_ckpt
+        self.mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.shardings = shardings
+        self.straggler_factor = straggler_factor
+        self.on_straggler = on_straggler or (lambda step, t: None)
+        self.straggler_count = 0
+        self._times: List[float] = []
+        self._preempted = False
+        fn = step_fn or make_train_step(run)
+        self.step_fn = jax.jit(fn, donate_argnums=(0,)) \
+            if step_fn is None else step_fn
+        self.state: Optional[TrainState] = None
+        self.metrics_history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self) -> TrainState:
+        key = jax.random.PRNGKey(self.run.train.seed)
+        state = init_train_state(self.run, key)
+        if self.mgr is not None and self.mgr.latest_step() is not None:
+            state, extra = self.mgr.restore(state, shardings=self.shardings)
+            if "loader" in extra:
+                self.loader.restore(extra["loader"])
+        self.state = state
+        return state
+
+    def _install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not main thread (tests)
+
+    def _checkpoint(self, blocking=False):
+        if self.mgr is None or self.state is None:
+            return
+        self.mgr.save(int(self.state.step), self.state,
+                      extra={"loader": self.loader.state()},
+                      blocking=blocking or not self.async_ckpt)
+
+    def _watch_stragglers(self, step: int, dt: float):
+        self._times.append(dt)
+        window = self._times[-50:]
+        if len(window) >= 5:
+            med = statistics.median(window)
+            if dt > self.straggler_factor * med:
+                self.straggler_count += 1
+                self.on_straggler(step, dt / med)
+
+    # ------------------------------------------------------------------
+    def fit(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
+        if self.state is None:
+            self.init_or_restore()
+        self._install_preemption_handler()
+        target = num_steps if num_steps is not None else self.run.train.steps
+        it = iter(self.loader)
+        while int(self.state.step) < target and not self._preempted:
+            batch = next(it)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            step = int(self.state.step)
+            self._watch_stragglers(step, dt)
+            metrics["step_time_s"] = dt
+            self.metrics_history.append(metrics)
+            if self.mgr is not None and step % self.ckpt_every == 0:
+                self._checkpoint()
+        # final (or preemption) checkpoint: synchronous
+        self._checkpoint(blocking=True)
+        if self.mgr is not None:
+            self.mgr.wait()
+        return {"steps": int(self.state.step),
+                "preempted": self._preempted,
+                "stragglers": self.straggler_count,
+                "final_loss": (self.metrics_history[-1]["loss"]
+                               if self.metrics_history else None)}

@@ -1,0 +1,18 @@
+"""Shared test helpers. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; multi-device tests spawn subprocesses (test_dist.py)."""
+import jax
+import jax.numpy as jnp
+
+
+def tree_maxdiff(t1, t2) -> float:
+    d = jax.tree.map(
+        lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                   - jnp.asarray(b, jnp.float32)).max()),
+        t1, t2)
+    return jax.tree_util.tree_reduce(max, d, 0.0)
+
+
+def tree_abssum(t) -> float:
+    d = jax.tree.map(lambda a: float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                             ).sum()), t)
+    return jax.tree_util.tree_reduce(lambda a, b: a + b, d, 0.0)

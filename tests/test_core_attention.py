@@ -1,0 +1,201 @@
+"""Core attention math: full/chunked/local/routing vs dense oracles."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RoutingConfig
+from repro.core import attention, kmeans, local, routing
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _qkv(B=2, H=4, Hkv=2, N=128, dh=32, key=KEY):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, H, N, dh)),
+            jax.random.normal(ks[1], (B, Hkv, N, dh)),
+            jax.random.normal(ks[2], (B, Hkv, N, dh)))
+
+
+class TestFullAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("chunk", [16, 32, 100])
+    def test_chunked_matches_dense(self, causal, chunk):
+        q, k, v = _qkv()
+        o1 = attention.full_attention(q, k, v, causal=causal)
+        o2 = attention.full_attention(q, k, v, causal=causal, chunk=chunk)
+        assert float(jnp.abs(o1 - o2).max()) < 1e-5
+
+    def test_pad_mask(self):
+        q, k, v = _qkv()
+        pm = jnp.arange(128)[None, :] < 64
+        pm = jnp.broadcast_to(pm, (2, 128))
+        o1 = attention.full_attention(q, k, v, causal=True, pad_mask=pm)
+        o2 = attention.full_attention(q[:, :, :64], k[:, :, :64],
+                                      v[:, :, :64], causal=True)
+        assert float(jnp.abs(o1[:, :, :64] - o2).max()) < 1e-5
+
+    def test_decode_positions(self):
+        """Single query at position t == row t of the full forward."""
+        q, k, v = _qkv(N=64)
+        o_full = attention.full_attention(q, k, v, causal=True)
+        t = 37
+        o_t = attention.full_attention(
+            q[:, :, t:t + 1], k, v, causal=True,
+            positions=jnp.full((2, 1), t))
+        assert float(jnp.abs(o_t[:, :, 0] - o_full[:, :, t]).max()) < 1e-5
+
+
+class TestLocalAttention:
+    @pytest.mark.parametrize("w", [16, 32, 64])
+    def test_blocked_semantics(self, w):
+        q, k, v = _qkv(N=128)
+        o = local.local_attention(q, k, v, window=w, causal=True)
+        pos = jnp.arange(128)
+        blk = pos // w
+        diff = blk[:, None] - blk[None, :]
+        keep = (diff >= 0) & (diff <= 1) & (pos[:, None] >= pos[None, :])
+        qg = q.reshape(2, 2, 2, 128, 32)
+        s = jnp.einsum("bhgnd,bhmd->bhgnm", qg, k) / jnp.sqrt(32)
+        s = jnp.where(keep, s, -1e9)
+        ref = jnp.einsum("bhgnm,bhmd->bhgnd", jax.nn.softmax(s, -1),
+                         v).reshape(2, 4, 128, 32)
+        assert float(jnp.abs(o - ref).max()) < 1e-5
+
+    def test_ragged_length_pads(self):
+        q, k, v = _qkv(N=100)       # not a multiple of the window
+        o = local.local_attention(q, k, v, window=32, causal=True)
+        assert o.shape == (2, 4, 100, 32)
+        assert bool(jnp.isfinite(o).all())
+
+
+class TestRoutingAttention:
+    @pytest.mark.parametrize("share_qk,causal", [(True, True),
+                                                 (False, False),
+                                                 (False, True)])
+    def test_vs_dense_oracle(self, share_qk, causal):
+        B, H, N, dh = 2, 4, 128, 32
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (B, H, N, dh))
+        k = jax.random.normal(ks[1], (B, H, N, dh))
+        v = jax.random.normal(ks[2], (B, H, N, dh))
+        st = kmeans.init_kmeans(ks[3], H, 4, dh)
+        cfg = RoutingConfig(num_clusters=4, share_qk=share_qk, causal=causal)
+        out = routing.routed_attention(q, None if share_qk else k, v, st,
+                                       cfg).out
+        ref = routing.routing_attention_dense_oracle(
+            q, None if share_qk else k, v, st, cfg)
+        assert float(jnp.abs(out - ref).max()) < 1e-4
+
+    def test_padding_never_selected(self):
+        B, H, N, dh = 2, 2, 64, 16
+        q = jax.random.normal(KEY, (B, H, N, dh))
+        st = kmeans.init_kmeans(KEY, H, 2, dh)
+        pm = jnp.arange(N)[None, :] < 40
+        pm = jnp.broadcast_to(pm, (B, N))
+        out = routing.routed_attention(
+            q, None, q, st, RoutingConfig(num_clusters=2, window=16),
+            pad_mask=pm, return_attn=True)
+        assert int(out.q_idx.max()) < 40
+
+    def test_window_larger_than_seq_clips(self):
+        q = jax.random.normal(KEY, (1, 2, 16, 8))
+        st = kmeans.init_kmeans(KEY, 2, 4, 8)
+        out = routing.routed_attention(
+            q, None, q, st, RoutingConfig(num_clusters=4, window=999))
+        assert out.out.shape == (1, 2, 16, 8)
+
+    def test_complexity_window(self):
+        """w defaults to n/k (the paper's balanced assignment size)."""
+        q = jax.random.normal(KEY, (1, 2, 64, 8))
+        st = kmeans.init_kmeans(KEY, 2, 8, 8)
+        out = routing.routed_attention(
+            q, None, q, st, RoutingConfig(num_clusters=8), return_attn=True)
+        assert out.q_idx.shape == (1, 2, 8, 8)      # k=8, w=64/8=8
+
+    def test_scatter_modes(self):
+        q = jax.random.normal(KEY, (1, 2, 64, 8))
+        st = kmeans.init_kmeans(KEY, 2, 4, 8)
+        for mode in ("mean", "last"):
+            out = routing.routed_attention(
+                q, None, q, st,
+                RoutingConfig(num_clusters=4, scatter_mode=mode))
+            assert bool(jnp.isfinite(out.out).all())
+
+
+class TestKMeans:
+    def test_normalize_routing_norm(self):
+        x = jax.random.normal(KEY, (4, 2, 32, 16)) * 5 + 3
+        r = kmeans.normalize_routing(x)
+        norms = jnp.linalg.norm(r, axis=-1)
+        assert float(jnp.abs(norms - jnp.sqrt(16)).max()) < 1e-2
+
+    def test_ema_pulls_centroids_toward_data(self):
+        """k-means objective improves: average best-centroid affinity of
+        *clusterable* data rises after EMA updates on that data."""
+        import numpy as np
+        rng = np.random.RandomState(0)
+        centers = rng.randn(2, 8) * 3
+        pts = np.stack([centers[i % 2] + rng.randn(8) * 0.1
+                        for i in range(64)])
+        r = kmeans.normalize_routing(
+            jnp.asarray(pts, jnp.float32).reshape(1, 1, 64, 8))
+        st = kmeans.init_kmeans(jax.random.PRNGKey(4), 1, 2, 8)
+        st2 = st
+        for _ in range(200):
+            st2 = kmeans.ema_update(st2, r, decay=0.8)
+        aff0 = float(kmeans.cluster_scores(r, st.mu).max(-1).mean())
+        aff1 = float(kmeans.cluster_scores(r, st2.mu).max(-1).mean())
+        assert aff1 > aff0 + 0.5, (aff0, aff1)
+
+    def test_padding_excluded_from_update(self):
+        st = kmeans.init_kmeans(KEY, 1, 2, 8)
+        r = kmeans.normalize_routing(jax.random.normal(KEY, (2, 1, 16, 8)))
+        pm = jnp.zeros((2, 16), bool)           # everything is padding
+        st2 = kmeans.ema_update(st, r, mask=pm)
+        assert float(jnp.abs(st2.mu - st.mu).max()) == 0.0
+
+    def test_empty_cluster_keeps_centroid(self):
+        st = kmeans.init_kmeans(KEY, 1, 4, 8)
+        # all data close to centroid 0 => clusters 1..3 unchanged
+        r = jnp.broadcast_to(st.mu[0, 0][None, None, None, :], (1, 1, 32, 8))
+        st2 = kmeans.ema_update(st, r, decay=0.5)
+        assert float(jnp.abs(st2.mu[0, 1:] - st.mu[0, 1:]).max()) == 0.0
+        assert float(jnp.abs(st2.mu[0, 0] - st.mu[0, 0]).max()) > 0.0
+
+
+class TestSegmentedRouting:
+    """Beyond-paper shard-local routing (RoutingConfig.segments)."""
+
+    def test_equals_per_segment_global(self):
+        B, H, N, dh, ns = 2, 4, 256, 32, 4
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, N, dh))
+        v = jax.random.normal(ks[1], (B, H, N, dh))
+        st = kmeans.init_kmeans(ks[2], H, 4, dh)
+        o_seg = routing.routed_attention(
+            q, None, v, st, RoutingConfig(num_clusters=4, segments=ns)).out
+        outs = []
+        for s in range(ns):
+            sl = slice(s * (N // ns), (s + 1) * (N // ns))
+            pos = jnp.broadcast_to(
+                jnp.arange(sl.start, sl.stop, dtype=jnp.int32),
+                (B, N // ns))
+            outs.append(routing.routed_attention(
+                q[:, :, sl], None, v[:, :, sl], st,
+                RoutingConfig(num_clusters=4), positions=pos).out)
+        assert float(jnp.abs(o_seg - jnp.concatenate(outs, 2)).max()) < 1e-6
+
+    def test_falls_back_when_indivisible(self):
+        q = jax.random.normal(KEY, (1, 2, 60, 8))     # 60 % 4 == 0 but
+        st = kmeans.init_kmeans(KEY, 2, 4, 8)         # 60/8 segs < k
+        out = routing.routed_attention(
+            q, None, q, st, RoutingConfig(num_clusters=4, segments=8))
+        assert out.out.shape == (1, 2, 60, 8)
+
+    def test_centroids_shared_and_updated(self):
+        q = jax.random.normal(KEY, (1, 2, 128, 8))
+        st = kmeans.init_kmeans(KEY, 2, 4, 8)
+        out = routing.routed_attention(
+            q, None, q, st, RoutingConfig(num_clusters=4, segments=4))
+        assert out.state.mu.shape == st.mu.shape
+        assert float(jnp.abs(out.state.mu - st.mu).max()) > 0

@@ -1,0 +1,86 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(3)
+TOL = {"float32": 2e-5, "bfloat16": 3e-2}
+
+
+def _mk(shape, dtype, key):
+    return jax.random.normal(key, shape, dtype=jnp.dtype(dtype))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,Hkv,N,dh,bq,bk,causal", [
+    (2, 4, 2, 256, 64, 128, 128, True),
+    (1, 2, 1, 128, 32, 64, 32, True),
+    (2, 4, 4, 128, 128, 64, 64, False),
+    (1, 8, 2, 512, 64, 128, 64, True),
+])
+def test_flash_attention_sweep(dtype, B, H, Hkv, N, dh, bq, bk, causal):
+    ks = jax.random.split(KEY, 3)
+    q = _mk((B, H, N, dh), dtype, ks[0])
+    k = _mk((B, Hkv, N, dh), dtype, ks[1])
+    v = _mk((B, Hkv, N, dh), dtype, ks[2])
+    o = ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    r = ref.flash_attention_ref(q, k, v, causal=causal)
+    err = float(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)).max())
+    assert err < TOL[dtype], err
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,Hkv,N,dh,w,causal", [
+    (2, 4, 2, 256, 64, 64, True),
+    (1, 2, 1, 128, 32, 32, False),
+    (2, 2, 2, 256, 128, 128, True),
+])
+def test_local_attention_sweep(dtype, B, H, Hkv, N, dh, w, causal):
+    ks = jax.random.split(KEY, 3)
+    q = _mk((B, H, N, dh), dtype, ks[0])
+    k = _mk((B, Hkv, N, dh), dtype, ks[1])
+    v = _mk((B, Hkv, N, dh), dtype, ks[2])
+    o = ops.local_attention(q, k, v, window=w, causal=causal)
+    r = ref.local_attention_ref(q, k, v, window=w, causal=causal)
+    err = float(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)).max())
+    assert err < TOL[dtype], err
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,kc,w,dh,bq,bk,causal,valid", [
+    (2, 2, 4, 128, 64, 64, 64, True, False),
+    (1, 2, 2, 64, 32, 32, 32, False, True),
+    (1, 1, 8, 128, 128, 128, 64, True, False),
+    (2, 2, 2, 64, 64, 32, 64, False, False),
+])
+def test_routed_blocks_sweep(dtype, B, H, kc, w, dh, bq, bk, causal, valid):
+    ks = jax.random.split(KEY, 6)
+    qg = _mk((B, H, kc, w, dh), dtype, ks[0])
+    kg = _mk((B, H, kc, w, dh), dtype, ks[1])
+    vg = _mk((B, H, kc, w, dh), dtype, ks[2])
+    pq = jax.random.randint(ks[3], (B, H, kc, w), 0, 4096)
+    pk = pq if causal else jax.random.randint(ks[4], (B, H, kc, w), 0, 4096)
+    vk = jax.random.bernoulli(ks[5], 0.85, (B, H, kc, w)) if valid else None
+    o = ops.routed_attention_blocks(qg, kg, vg, pq, pk, causal=causal,
+                                    valid_k=vk, bq=bq, bk=bk)
+    r = ref.routed_attention_blocks_ref(qg, kg, vg, pq, pk, causal=causal,
+                                        valid_k=vk)
+    err = float(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)).max())
+    assert err < TOL[dtype], err
+
+
+def test_routing_module_pallas_equals_xla():
+    from repro.configs.base import RoutingConfig
+    from repro.core.kmeans import init_kmeans
+    from repro.core.routing import routed_attention
+    B, H, N, dh = 2, 4, 256, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, N, dh))
+    v = jax.random.normal(ks[1], (B, H, N, dh))
+    st = init_kmeans(ks[2], H, 4, dh)
+    cfg = RoutingConfig(num_clusters=4)
+    o_x = routed_attention(q, None, v, st, cfg, impl="xla").out
+    o_p = routed_attention(q, None, v, st, cfg, impl="pallas").out
+    assert float(jnp.abs(o_x - o_p).max()) < 1e-5

@@ -1,0 +1,190 @@
+"""Model components: SSD vs naive recurrence, RG-LRU scan vs naive, MoE
+dispatch equivalence + capacity semantics, segment construction."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, RoutingConfig, with_overrides
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import build_segments, head_split, LayerSpec
+
+KEY = jax.random.PRNGKey(11)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("S,chunk", [(64, 16), (100, 32), (32, 32),
+                                         (48, 64)])
+    def test_chunked_equals_naive(self, S, chunk):
+        B, H, P, N = 2, 3, 8, 16
+        ks = jax.random.split(KEY, 4)
+        xh = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+        Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+        Cm = jax.random.normal(ks[0], (B, S, N)) * 0.5
+        y1, s1 = ssm_mod.ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+        y2, s2 = ssm_mod.ssd_naive(xh, dt, A, Bm, Cm)
+        assert float(jnp.abs(y1 - y2).max()) < 1e-3
+        assert float(jnp.abs(s1 - s2).max()) < 1e-3
+
+    def test_state_carries_across_calls(self):
+        """chunked(x[0:S]) == chunked(x[:S/2]) then chunked(x[S/2:], state)."""
+        B, S, H, P, N = 1, 64, 2, 8, 16
+        ks = jax.random.split(KEY, 4)
+        xh = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+        Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+        Cm = jax.random.normal(ks[0], (B, S, N)) * 0.5
+        y_all, _ = ssm_mod.ssd_chunked(xh, dt, A, Bm, Cm, 16)
+        y1, st = ssm_mod.ssd_chunked(xh[:, :32], dt[:, :32], A, Bm[:, :32],
+                                     Cm[:, :32], 16)
+        y2, _ = ssm_mod.ssd_chunked(xh[:, 32:], dt[:, 32:], A, Bm[:, 32:],
+                                    Cm[:, 32:], 16, init_state=st)
+        err = float(jnp.abs(jnp.concatenate([y1, y2], 1) - y_all).max())
+        assert err < 1e-3
+
+    def test_gradients_finite(self):
+        cfg = ModelConfig(family="ssm", d_model=32, ssm_state=8,
+                          ssm_chunk=16, dtype="float32")
+        p = ssm_mod.init_ssd(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 48, 32))
+
+        def f(p):
+            y, _ = ssm_mod.apply_ssd(p, x, cfg)
+            return jnp.sum(y ** 2)
+
+        g = jax.grad(f)(p)
+        for leaf in jax.tree.leaves(g):
+            assert bool(jnp.isfinite(leaf).all())
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("S", [16, 64, 100])
+    def test_scan_equals_naive(self, S):
+        B, w = 2, 8
+        ks = jax.random.split(KEY, 2)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, w)))
+        b = jax.random.normal(ks[1], (B, S, w))
+        h1 = rglru_mod.rglru_scan(a, b)
+        h2 = rglru_mod.rglru_naive(a, b)
+        assert float(jnp.abs(h1 - h2).max()) < 1e-4
+
+    def test_initial_state(self):
+        B, S, w = 1, 32, 4
+        ks = jax.random.split(KEY, 3)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, w)))
+        b = jax.random.normal(ks[1], (B, S, w))
+        h0 = jax.random.normal(ks[2], (B, w))
+        h1 = rglru_mod.rglru_scan(a, b, h0)
+        h2 = rglru_mod.rglru_naive(a, b, h0)
+        assert float(jnp.abs(h1 - h2).max()) < 1e-4
+
+    def test_decay_bounded(self):
+        cfg = ModelConfig(d_model=16, lru_width=16, dtype="float32")
+        p = rglru_mod.init_rglru(KEY, cfg)
+        u = jax.random.normal(KEY, (2, 8, 16))
+        a, _ = rglru_mod._gates(p, u)
+        assert float(a.min()) > 0.0 and float(a.max()) < 1.0
+
+
+class TestMoE:
+    def _cfg(self, cf=8.0):
+        return ModelConfig(family="moe", d_model=32, d_ff=64, moe_experts=4,
+                           moe_capacity_factor=cf, dtype="float32")
+
+    def test_einsum_equals_scatter(self):
+        cfg = self._cfg()
+        p = moe_mod.init_moe(KEY, cfg)
+        x = jax.random.normal(KEY, (3, 16, 32))
+        y1, a1 = moe_mod.apply_moe(p, x, cfg, impl="einsum")
+        y2, a2 = moe_mod.apply_moe(p, x, cfg, impl="scatter")
+        assert float(jnp.abs(y1 - y2).max()) < 1e-5
+        assert abs(float(a1["moe_drop_frac"]) - float(a2["moe_drop_frac"])) \
+            < 1e-6
+
+    def test_capacity_drops_counted(self):
+        cfg = self._cfg(cf=0.25)        # tiny capacity forces drops
+        p = moe_mod.init_moe(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 32, 32))
+        y, aux = moe_mod.apply_moe(p, x, cfg)
+        assert float(aux["moe_drop_frac"]) > 0.0
+        assert bool(jnp.isfinite(y).all())
+
+    def test_identical_experts_match_dense(self):
+        """If all experts share weights + no drops, MoE == dense MLP*gate+shared."""
+        from repro.models.layers import apply_mlp
+        cfg = with_overrides(self._cfg(), moe_shared_expert=False)
+        p = moe_mod.init_moe(KEY, cfg)
+        # tie all experts to expert 0
+        for k in ("w_up", "w_gate", "w_down"):
+            p[k] = jnp.broadcast_to(p[k][0][None], p[k].shape)
+        x = jax.random.normal(KEY, (2, 16, 32))
+        y, aux = moe_mod.apply_moe(p, x, cfg)
+        mlp = {"w_up": p["w_up"][0], "w_gate": p["w_gate"][0],
+               "w_down": p["w_down"][0]}
+        ref = apply_mlp(mlp, x, "swiglu")
+        logits = x.astype(jnp.float32) @ p["router"]
+        gate = jax.nn.softmax(logits, -1).max(-1)
+        assert float(jnp.abs(y - ref * gate[..., None]).max()) < 1e-4
+
+    def test_load_balance_loss_uniform_is_one(self):
+        """Perfectly uniform routing gives LB loss == 1 (Switch normalizer)."""
+        cfg = self._cfg()
+        p = moe_mod.init_moe(KEY, cfg)
+        p["router"] = jnp.zeros_like(p["router"])   # uniform probs
+        x = jax.random.normal(KEY, (2, 64, 32))
+        _, aux = moe_mod.apply_moe(p, x, cfg)
+        # f_e concentrates on argmax ties -> allow slack around 1
+        assert 0.9 < float(aux["moe_lb_loss"]) < 1.6
+
+
+class TestSegments:
+    def test_dense(self):
+        cfg = ModelConfig(family="dense", num_layers=8)
+        segs = build_segments(cfg)
+        assert len(segs) == 1 and segs[0][1] == 8
+
+    def test_moe_interleave(self):
+        cfg = ModelConfig(family="moe", num_layers=6, moe_experts=4,
+                          moe_interleave=2)
+        segs = build_segments(cfg)
+        assert segs[0][0][0].kind == "moe" and segs[0][0][1].kind == "attn"
+        assert segs[0][1] == 3
+
+    def test_hybrid_tail(self):
+        cfg = ModelConfig(family="hybrid", num_layers=38,
+                          hybrid_pattern=("rglru", "rglru", "attn"))
+        segs = build_segments(cfg)
+        total = sum(len(p) * g for p, g in segs)
+        assert total == 38
+        assert segs[0][1] == 12 and len(segs[1][0]) == 2   # tail rglru x2
+
+    def test_pg19_routing_suffix(self):
+        cfg = ModelConfig(
+            family="dense", num_layers=22, attention="local+routing",
+            num_heads=8, num_kv_heads=8,
+            routing=RoutingConfig(routing_heads=2, routing_layers=(20, 21)))
+        segs = build_segments(cfg)
+        assert sum(len(p) * g for p, g in segs) == 22
+        assert segs[0][0][0].attn == "local" and segs[0][1] == 20
+        assert segs[-1][0][0].attn == "local+routing" and segs[-1][1] == 2
+
+    def test_vlm_cross_positions(self):
+        cfg = ModelConfig(family="vlm", num_layers=40)
+        segs = build_segments(cfg)
+        pat = segs[0][0]
+        assert [s.kind for s in pat] == ["attn"] * 4 + ["cross"]
+        assert segs[0][1] == 8
+
+    def test_head_split_alignment(self):
+        cfg = ModelConfig(num_heads=32, num_kv_heads=8,
+                          attention="local+routing")
+        Hl, Hr, kvl, kvr = head_split(cfg)
+        assert Hl + Hr == 32 and kvl + kvr == 8
+        cfg1 = ModelConfig(num_heads=16, num_kv_heads=1,
+                           attention="local+routing")
+        Hl, Hr, kvl, kvr = head_split(cfg1)
+        assert kvl == kvr == 1

@@ -1,0 +1,163 @@
+"""Training substrate: loss decreases, grad-accum equivalence, optimizers,
+schedules, the paper-mechanism check (routing beats random routing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tree_maxdiff
+from repro.configs.base import (ModelConfig, RoutingConfig, RunConfig,
+                                TrainConfig, with_overrides)
+from repro.data.synthetic import SyntheticLoader, copy_batch, markov_batch
+from repro.optim import adafactor, adam, make_schedule
+from repro.train.train_step import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small_run(attention="local+routing", steps=25, **kw):
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=64, attention=attention,
+                      routing=RoutingConfig(num_clusters=4, local_window=16),
+                      dtype="float32")
+    tc = dict(global_batch=8, seq_len=64, steps=steps, lr=3e-3,
+              schedule="const", warmup_steps=5)
+    tc.update(kw)
+    return RunConfig(model=cfg, train=TrainConfig(**tc))
+
+
+def _fit(run, task="markov"):
+    ts = init_train_state(run, KEY)
+    step = jax.jit(make_train_step(run))
+    loader = SyntheticLoader(task, run.model.vocab_size,
+                             run.train.global_batch, run.train.seq_len)
+    losses = []
+    for _, b in zip(range(run.train.steps), loader):
+        ts, m = step(ts, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    return losses, ts
+
+
+def test_loss_decreases_routing_transformer():
+    losses, _ = _fit(_small_run())
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_grad_accum_equivalence():
+    """A=2 accumulation == A=1 on the same global batch (fp32, tight tol)."""
+    r1 = _small_run(steps=1, grad_accum=1, attention="full")
+    r2 = _small_run(steps=1, grad_accum=2, attention="full")
+    ts1 = init_train_state(r1, KEY)
+    ts2 = jax.tree.map(lambda x: x, ts1)
+    b = next(iter(SyntheticLoader("markov", 64, 8, 64)))
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    ts1, m1 = jax.jit(make_train_step(r1))(ts1, b)
+    ts2, m2 = jax.jit(make_train_step(r2))(ts2, b)
+    # losses averaged over microbatches differ only by masking order; the
+    # parameter update must agree to numerical tolerance
+    assert tree_maxdiff(ts1.params, ts2.params) < 5e-5
+
+
+def test_remat_matches_no_remat():
+    r1 = _small_run(steps=1, remat="none", attention="full")
+    r2 = _small_run(steps=1, remat="full", attention="full")
+    ts = init_train_state(r1, KEY)
+    b = {k: jnp.asarray(v) for k, v in
+         next(iter(SyntheticLoader("markov", 64, 8, 64))).items()}
+    o1, m1 = jax.jit(make_train_step(r1))(jax.tree.map(lambda x: x, ts), b)
+    o2, m2 = jax.jit(make_train_step(r2))(ts, b)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    assert tree_maxdiff(o1.params, o2.params) < 5e-5
+
+
+def test_adam_quadratic_convergence():
+    init, upd = adam(0.9, 0.999, 1e-8)
+    w = {"x": jnp.array([4.0, -2.0])}
+    st = init(w)
+    for _ in range(200):
+        w, st = upd({"x": 2 * w["x"]}, st, w, 0.1)
+    assert float(jnp.abs(w["x"]).max()) < 1e-2
+
+
+def test_adafactor_factored_stats_shapes():
+    init, upd = adafactor()
+    w = {"m": jnp.ones((8, 16)), "v": jnp.ones((4,))}
+    st = init(w)
+    assert st["stats"]["m"]["vr"].shape == (8,)
+    assert st["stats"]["m"]["vc"].shape == (16,)
+    assert st["stats"]["v"]["v"].shape == (4,)
+    w2, st2 = upd(jax.tree.map(jnp.ones_like, w), st, w, 0.01)
+    assert tree_maxdiff(w, w2) > 0
+
+
+def test_schedules_shapes():
+    tc = TrainConfig(lr=1e-3, warmup_steps=10, schedule="vaswani")
+    for name in ("vaswani", "linear_warmup_rsqrt", "const"):
+        fn = make_schedule(with_overrides(tc, schedule=name), 64)
+        vals = [float(fn(jnp.asarray(s))) for s in [1, 5, 10, 100, 1000]]
+        assert all(v > 0 for v in vals)
+        assert vals[-1] <= vals[2] * 1.01 or name == "const"
+
+
+def test_grad_clipping_caps_norm():
+    from repro.train.train_step import clip_by_global_norm, global_norm
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100.0
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_copy_task_routing_beats_random_mechanism():
+    """Paper Table 1 mechanism: content-based routing (MIPS) selects
+    higher-dot-product pairs than random assignment."""
+    from repro.core.kmeans import init_kmeans, normalize_routing
+    from repro.core.routing import balanced_topk, cluster_scores
+    rng = np.random.RandomState(0)
+    # data with planted cluster structure
+    centers = rng.randn(4, 16) * 2
+    x = jnp.asarray(np.concatenate(
+        [centers[i % 4] + rng.randn(16) * 0.2 for i in range(64)]
+    ).reshape(1, 1, 64, 16), dtype=jnp.float32)
+    r = normalize_routing(x)
+    st = init_kmeans(jax.random.PRNGKey(1), 1, 4, 16)
+    from repro.core.kmeans import ema_update
+    for _ in range(30):
+        st = ema_update(st, r, decay=0.7)
+    idx = balanced_topk(cluster_scores(r, st.mu), 16)
+    # mean intra-cluster dot of routed pairs vs random pairs
+    gathered = jnp.take_along_axis(
+        jnp.broadcast_to(r, (1, 1, 64, 16)), idx.reshape(1, 1, -1, 1), 2
+    ).reshape(1, 1, 4, 16, 16)
+    intra = jnp.einsum("bhkwd,bhkud->bhkwu", gathered, gathered).mean()
+    rnd = jax.random.permutation(jax.random.PRNGKey(2), 64)[:16 * 4]
+    rg = r[:, :, rnd].reshape(1, 1, 4, 16, 16)
+    rand_intra = jnp.einsum("bhkwd,bhkud->bhkwu", rg, rg).mean()
+    assert float(intra) > float(rand_intra) + 0.5
+
+
+def test_encoder_masked_prediction_loss():
+    cfg = ModelConfig(family="encoder", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=32,
+                      is_causal=False, position="none", dtype="float32")
+    run = RunConfig(model=cfg, train=TrainConfig(global_batch=2, seq_len=32))
+    ts = init_train_state(run, KEY)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, 32),
+             "features": jax.random.normal(KEY, (B, S, 32)),
+             "mask_spans": jax.random.bernoulli(KEY, 0.3, (B, S))}
+    ts2, m = jax.jit(make_train_step(run))(ts, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_segmented_routing_trains():
+    """Beyond-paper shard-local routing wired end-to-end: loss decreases."""
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=64, attention="local+routing",
+                      routing=RoutingConfig(num_clusters=4, local_window=16,
+                                            segments=4),
+                      dtype="float32")
+    run = RunConfig(model=cfg, train=TrainConfig(
+        global_batch=8, seq_len=64, steps=15, lr=3e-3, schedule="const",
+        warmup_steps=3))
+    losses, _ = _fit(run)
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])

@@ -1,24 +1,24 @@
-"""Batched serving with the cluster-paged routing KV cache.
+"""Continuous-batching serving with the slot-pooled routing KV cache.
 
-Prefills a batch of 8 requests and decodes 32 tokens each through the
-Routing Transformer serving path (local ring cache + argmax-routed cluster
-pages, O(window + cap) per step instead of O(context)). Prints per-phase
-throughput.
+Twelve requests with mixed prompt lengths, generation lengths, and sampling
+settings arrive staggered over time. The engine admits each into a free
+cache lane (FCFS + token budget), decodes every active lane in ONE jitted
+step (cluster-paged routing cache: O(window + cap) per token), retires
+finished requests, and reuses their lanes for later arrivals — no request
+ever waits for a batch-mate to finish.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
-import time
+import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RoutingConfig
 from repro.models.model import init_model
-from repro.serve.serving import init_cache, make_serve_step, prefill
+from repro.serve.engine import InferenceEngine, Request, SamplingParams
 
 
 def main():
-    B, PREFIX, GEN = 8, 192, 32
     cfg = ModelConfig(
         name="rt-serve", family="dense", num_layers=4, d_model=256,
         num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=1024,
@@ -26,41 +26,45 @@ def main():
         routing=RoutingConfig(num_clusters=8, local_window=32),
         dtype="float32")
     params, kstate = init_model(cfg, jax.random.PRNGKey(0))
+
+    n_req, max_slots = 12, 4
+    rng = np.random.RandomState(1)
+    prompt_lens = (24, 48, 96, 192)
+    gen_lens = (8, 16, 24, 32)
+    requests = []
+    for uid in range(n_req):
+        sampling = (SamplingParams() if uid % 3 == 0 else
+                    SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                                   seed=uid))
+        requests.append(Request(
+            uid=uid,
+            prompt=rng.randint(0, cfg.vocab_size,
+                               size=prompt_lens[uid % 4]).tolist(),
+            max_new_tokens=gen_lens[(3 * uid + 1) % 4],
+            sampling=sampling,
+            arrival_step=2 * uid))
+    max_len = max(prompt_lens) + max(gen_lens)
     print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
-          f"batch={B} prefix={PREFIX} gen={GEN}")
+          f"{n_req} staggered requests over {max_slots} slots "
+          f"(max_len={max_len})")
 
-    toks = jax.random.randint(jax.random.PRNGKey(1), (B, PREFIX), 0,
-                              cfg.vocab_size)
-    cache = init_cache(cfg, B, max_len=PREFIX + GEN)
+    eng = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
+                          max_len=max_len, token_budget=4 * max_len)
+    outputs = eng.run(requests)
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, kstate, cache, {"tokens": toks}, cfg)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {B * PREFIX} tokens in {t_prefill*1e3:.0f} ms "
-          f"({B * PREFIX / t_prefill:.0f} tok/s)")
+    print(f"{'uid':>3} {'arrive':>6} {'slot':>4} {'prompt':>6} {'gen':>4} "
+          f"{'ttft_ms':>8}  first tokens")
+    for r in requests:
+        st = eng.metrics.requests[r.uid]
+        print(f"{r.uid:>3} {st.arrival_step:>6} {st.slot:>4} "
+              f"{st.prompt_len:>6} {st.n_generated:>4} "
+              f"{st.ttft_s*1e3:>8.0f}  {outputs[r.uid][:6]}")
 
-    serve = jax.jit(make_serve_step(cfg))
-    tok = jnp.argmax(logits[:, -1], -1)
-    # warmup compile
-    _ = serve(params, kstate, cache, tok, jnp.full((B,), PREFIX, jnp.int32))
-    t0 = time.perf_counter()
-    cur = cache
-    for t in range(PREFIX, PREFIX + GEN):
-        lg, cur = serve(params, kstate, cur, tok,
-                        jnp.full((B,), t, jnp.int32))
-        tok = jnp.argmax(lg, -1)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    print(f"decode: {B * GEN} tokens in {t_decode*1e3:.0f} ms "
-          f"({B * GEN / t_decode:.0f} tok/s, "
-          f"{t_decode / GEN * 1e3:.1f} ms/step)")
-
-    # show the routing cache filled up
-    rlen = cur[0]["0"]["rlen"]
-    print(f"cluster page occupancy (layer group 0): "
-          f"min={int(rlen.min())} max={int(rlen.max())} "
-          f"sum/head={int(rlen.sum(-1).mean())} (== tokens seen)")
+    s = eng.metrics.summary()
+    print(f"decode: {s['decode_tokens']} tokens in {s['decode_steps']} steps "
+          f"({s['decode_tokens_per_s']:.0f} tok/s, "
+          f"occupancy {s['mean_occupancy']:.2f}/{max_slots}); "
+          f"prefill: {s['prefill_tokens']} tokens")
 
 
 if __name__ == "__main__":

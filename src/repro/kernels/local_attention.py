@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 _NEG = -1e9
 
 
@@ -74,7 +77,7 @@ def local_attention_kernel(q, k, v, window, causal=True, interpret=True):
         ],
         out_specs=pl.BlockSpec((1, w, dh), lambda bh, b: (bh, b, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, N, dh), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, kf, kf, vf, vf, vf)

@@ -119,6 +119,21 @@ def _expand_kv(x: jax.Array, reps: int) -> jax.Array:
     return jnp.repeat(x, reps, axis=1) if reps > 1 else x
 
 
+def where_active(active: jax.Array, new_tree, old_tree, batch_axis: int = 1):
+    """Row-select between two cache pytrees along the slot (batch) axis.
+
+    Continuous-batching decode runs every pool slot through the stack each
+    step; rows where ``active`` is False must be exact no-ops so a finished
+    or free slot's cache is untouched until it is re-admitted. ``active`` is
+    a (B,) bool vector; leaves are indexed (…, B, …) at ``batch_axis``.
+    """
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[batch_axis] = -1
+        return jnp.where(active.reshape(shape), n, o)
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
 # ---------------------------------------------------------------------------
 # Layer init
 # ---------------------------------------------------------------------------

@@ -1,0 +1,24 @@
+"""Continuous-batching inference engine (DESIGN.md §5).
+
+Public surface:
+  InferenceEngine, Request      — request lifecycle + step loop
+  SamplingParams                — per-request decode sampling knobs
+  FCFSScheduler                 — admission / backpressure policy
+  EngineMetrics                 — TTFT / throughput / occupancy counters
+  init_pool, write_slot, reset_slot, read_slot — slot-pooled cache lanes
+"""
+from repro.serve.engine.engine import (DECODE, FINISHED, PREFILL, WAITING,
+                                       InferenceEngine, Request)
+from repro.serve.engine.metrics import EngineMetrics, RequestStats
+from repro.serve.engine.pool import (init_pool, read_slot, reset_slot,
+                                     write_slot)
+from repro.serve.engine.sampling import (SamplingParams, request_key,
+                                         sample_tokens)
+from repro.serve.engine.scheduler import FCFSScheduler
+
+__all__ = [
+    "InferenceEngine", "Request", "SamplingParams", "FCFSScheduler",
+    "EngineMetrics", "RequestStats", "init_pool", "write_slot", "reset_slot",
+    "read_slot", "request_key", "sample_tokens",
+    "WAITING", "PREFILL", "DECODE", "FINISHED",
+]

@@ -1,0 +1,297 @@
+"""Continuous-batching inference engine over the slot-pooled routing cache.
+
+Request lifecycle::
+
+    WAITING --admit (free slot + token budget)--> PREFILL
+    PREFILL --first token sampled, lane written--> DECODE
+    DECODE  --eos_id / max_new_tokens----------->  FINISHED (lane reset,
+                                                   slot returned to pool)
+
+Each engine ``step()``:
+
+  1. admit: pop FCFS-admittable requests and prefill each into a free lane
+     (one jitted prefill per request at its exact prompt length — distinct
+     lengths compile once and are cached by jit). The first output token is
+     sampled from the prefill logits.
+  2. decode: ONE jitted ``serve_step`` over ALL pool slots with a per-slot
+     active mask — free/finished lanes are exact no-ops, so requests at
+     different positions, prompt lengths, and sampling settings share the
+     batch. Per-slot sampling is a second jitted call.
+  3. retire: finished requests free their lane (``reset_slot``) so the next
+     admission reuses it without reallocation.
+
+Because every lane is computed independently and sampling keys are
+counter-based per request, a request's outputs are bit-identical no matter
+which slot it occupies or who its co-tenants are (tested).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.engine.metrics import EngineMetrics
+from repro.serve.engine.pool import init_pool, reset_slot, write_slot
+from repro.serve.engine.scheduler import FCFSScheduler
+from repro.serve.engine.sampling import (SamplingParams, request_base_key,
+                                         request_key, sample_tokens)
+from repro.serve.serving import init_cache, make_serve_step, prefill
+
+WAITING, PREFILL, DECODE, FINISHED = "WAITING", "PREFILL", "DECODE", "FINISHED"
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    arrival_step: int = 0       # engine step at which the request shows up
+    state: str = WAITING
+    output: List[int] = field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclass
+class _Slot:
+    request: Request
+    pos: int                    # next decode position (= tokens in context)
+    last_token: int
+    base_key: np.ndarray        # request_base_key, host-side
+
+
+def _make_decode_sample(cfg: ModelConfig):
+    """Fused decode + per-slot key fold-in + sampling: ONE dispatch/step."""
+    serve_step = make_serve_step(cfg)
+
+    def decode_sample(params, kstate, pool, tokens, pos, active,
+                      base_keys, tok_idx, temps, top_ks, top_ps):
+        logits, new_pool = serve_step(params, kstate, pool, tokens, pos,
+                                      active)
+        keys = jax.vmap(jax.random.fold_in)(base_keys, tok_idx)
+        toks = sample_tokens(keys, logits, temps, top_ks, top_ps)
+        return toks, logits, new_pool
+
+    return decode_sample
+
+
+def _make_decode_greedy(cfg: ModelConfig):
+    """Greedy fast path: skips the sort/PRNG machinery of the full sampler
+    (several ms/step on CPU) when every active slot decodes at temp 0."""
+    serve_step = make_serve_step(cfg)
+
+    def decode_greedy(params, kstate, pool, tokens, pos, active):
+        logits, new_pool = serve_step(params, kstate, pool, tokens, pos,
+                                      active)
+        return jnp.argmax(logits, -1).astype(jnp.int32), logits, new_pool
+
+    return decode_greedy
+
+
+class InferenceEngine:
+    """Admits, schedules, decodes, and retires requests independently."""
+
+    def __init__(self, cfg: ModelConfig, params, kstate, *, max_slots: int,
+                 max_len: int, token_budget: Optional[int] = None,
+                 record_logits: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.kstate = kstate
+        self.max_slots = max_slots
+        self.max_len = max_len
+        # the engine owns self.pool exclusively and reassigns it on every
+        # call, so the decode steps donate it for in-place cache updates
+        # (donation is a no-op warning on backends that lack aliasing)
+        self._decode_sample = jax.jit(_make_decode_sample(cfg),
+                                      donate_argnums=(2,))
+        self._decode_greedy = jax.jit(_make_decode_greedy(cfg),
+                                      donate_argnums=(2,))
+        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg))
+        self.pool = init_pool(cfg, max_slots, max_len)
+        # prefill never mutates its cache argument (functional), so one
+        # fresh B=1 lane serves every admission without reallocation
+        self._fresh_lane = init_cache(cfg, 1, max_len)
+        self.slots: List[Optional[_Slot]] = [None] * max_slots
+        self.scheduler = FCFSScheduler(token_budget)
+        self.metrics = EngineMetrics()
+        self.step_count = 0
+        self.record_logits = record_logits
+        self.logits_trace: Dict[int, List[np.ndarray]] = {}
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, request: Request) -> None:
+        if request.prompt_len < 1 or request.max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens>=1")
+        reserved = request.prompt_len + request.max_new_tokens
+        if reserved > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt+max_new {reserved} exceeds "
+                f"pool max_len {self.max_len}")
+        budget = self.scheduler.token_budget
+        if budget is not None and reserved > budget:
+            # would never be admittable; with FCFS head-of-line blocking it
+            # would also starve everything queued behind it
+            raise ValueError(
+                f"request {request.uid}: reserved tokens {reserved} exceed "
+                f"the scheduler token budget {budget}")
+        if request.output:
+            raise ValueError(
+                f"request {request.uid} already has output; submit a fresh "
+                f"Request (e.g. dataclasses.replace(r, output=[]))")
+        if (self.scheduler.has_uid(request.uid)
+                or any(s is not None and s.request.uid == request.uid
+                       for s in self.slots)):
+            raise ValueError(
+                f"request uid {request.uid} is already queued or active; "
+                f"uids key outputs, metrics, and PRNG streams")
+        request.state = WAITING
+        self.scheduler.submit(request)
+        self.metrics.on_submit(request.uid, request.prompt_len,
+                               self.step_count)
+
+    # -- slot accounting ---------------------------------------------------
+    def free_slot_ids(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def tokens_in_flight(self) -> int:
+        return sum(FCFSScheduler.reserved_tokens(s.request)
+                   for s in self.slots if s is not None)
+
+    # -- sampling ----------------------------------------------------------
+    def _sample_first(self, req: Request, logits_row) -> int:
+        sp = req.sampling
+        tok = sample_tokens(
+            request_key(sp, req.uid, 0)[None],
+            logits_row.astype(jnp.float32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32))
+        return int(tok[0])
+
+    # -- lifecycle steps ---------------------------------------------------
+    def _admit_and_prefill(self) -> None:
+        while True:
+            free = self.free_slot_ids()
+            if not free:
+                return
+            req = self.scheduler.next_admittable(len(free),
+                                                self.tokens_in_flight())
+            if req is None:
+                return
+            self._prefill_into(free[0], req)
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        t0 = time.perf_counter()
+        req.state = PREFILL
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, lane = self._prefill(self.params, self.kstate,
+                                     self._fresh_lane, {"tokens": toks})
+        self.pool = write_slot(self.pool, slot, lane)
+        tok = self._sample_first(req, logits[:, -1])
+        dt = time.perf_counter() - t0
+        req.state = DECODE
+        req.output.append(tok)
+        if self.record_logits:
+            self.logits_trace.setdefault(req.uid, []).append(
+                np.asarray(logits[0, -1]))
+        self.metrics.on_prefill(req.uid, slot, self.step_count,
+                                req.prompt_len, dt)
+        self.metrics.on_token(req.uid)
+        self.slots[slot] = _Slot(
+            req, pos=req.prompt_len, last_token=tok,
+            base_key=np.asarray(request_base_key(req.sampling, req.uid)))
+        if self._is_finished(req, tok):
+            self._retire(slot)
+
+    def _is_finished(self, req: Request, tok: int) -> bool:
+        return (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
+
+    def _retire(self, slot: int) -> None:
+        s = self.slots[slot]
+        s.request.state = FINISHED
+        self.metrics.on_finish(s.request.uid, self.step_count)
+        self.pool = reset_slot(self.pool, slot)
+        self.slots[slot] = None
+
+    def _decode_once(self) -> None:
+        active_ids = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active_ids:
+            return
+        t0 = time.perf_counter()
+        B = self.max_slots
+        tokens = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        act = np.zeros((B,), bool)
+        for i in active_ids:
+            s = self.slots[i]
+            tokens[i], pos[i], act[i] = s.last_token, s.pos, True
+        all_greedy = all(self.slots[i].request.sampling.temperature <= 0
+                         for i in active_ids)
+        if all_greedy:
+            toks, logits, self.pool = self._decode_greedy(
+                self.params, self.kstate, self.pool, tokens, pos, act)
+        else:
+            temps = np.zeros((B,), np.float32)
+            tks = np.zeros((B,), np.int32)
+            tps = np.ones((B,), np.float32)
+            tok_idx = np.zeros((B,), np.uint32)
+            ref = self.slots[active_ids[0]].base_key
+            base_keys = np.zeros((B,) + ref.shape, ref.dtype)
+            for i in active_ids:
+                s = self.slots[i]
+                sp = s.request.sampling
+                temps[i], tks[i], tps[i] = sp.temperature, sp.top_k, sp.top_p
+                tok_idx[i] = len(s.request.output)
+                base_keys[i] = s.base_key
+            toks, logits, self.pool = self._decode_sample(
+                self.params, self.kstate, self.pool, tokens, pos, act,
+                base_keys, tok_idx, temps, tks, tps)
+        toks_host = np.asarray(toks)            # device sync
+        dt = time.perf_counter() - t0
+        self.metrics.on_decode_step(len(active_ids), dt)
+        logits_host = (np.asarray(logits) if self.record_logits else None)
+        for i in active_ids:
+            s = self.slots[i]
+            tok = int(toks_host[i])
+            s.request.output.append(tok)
+            s.last_token = tok
+            s.pos += 1
+            self.metrics.on_token(s.request.uid)
+            if logits_host is not None:
+                self.logits_trace.setdefault(s.request.uid, []).append(
+                    logits_host[i])
+            if self._is_finished(s.request, tok):
+                self._retire(i)
+
+    def step(self) -> None:
+        """One engine iteration: admit + prefill, then one decode step."""
+        self._admit_and_prefill()
+        self._decode_once()
+        self.step_count += 1
+
+    def has_work(self) -> bool:
+        return bool(len(self.scheduler)) or any(s is not None
+                                                for s in self.slots)
+
+    def run(self, requests: Sequence[Request] = (),
+            max_steps: int = 1_000_000) -> Dict[int, List[int]]:
+        """Submit ``requests`` at their arrival_step; run until drained."""
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.uid))
+        while pending or self.has_work():
+            while pending and pending[0].arrival_step <= self.step_count:
+                self.submit(pending.pop(0))
+            self.step()
+            if self.step_count > max_steps:
+                raise RuntimeError("engine did not drain the workload")
+        return {r.uid: list(r.output) for r in requests}

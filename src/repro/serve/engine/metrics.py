@@ -1,0 +1,104 @@
+"""Engine observability: per-request TTFT, decode throughput, occupancy.
+
+All counters are plain python updated on the host side of the step loop;
+``decode_tokens`` counts only *useful* tokens (active slots), so
+``decode_tokens_per_s`` is the aggregate goodput number the continuous
+batcher is supposed to move versus lock-step batching, and
+``tokens_per_step`` is its hardware-independent proxy (each decode step
+costs the same jitted call regardless of how many slots are active).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass
+class RequestStats:
+    uid: int
+    prompt_len: int
+    submit_time: float
+    arrival_step: int = 0
+    slot: Optional[int] = None
+    prefill_step: Optional[int] = None      # engine step of the first token
+    first_token_time: Optional[float] = None
+    finish_step: Optional[int] = None
+    n_generated: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+
+class EngineMetrics:
+    """Counters updated by the engine; ``summary()`` for reporting."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self.requests: Dict[int, RequestStats] = {}
+        self.decode_steps = 0
+        self.decode_tokens = 0          # useful (active-slot) tokens
+        self.decode_time_s = 0.0
+        self.prefill_tokens = 0
+        self.prefill_time_s = 0.0
+        self.occupancy_sum = 0          # active slots summed over decode steps
+
+    def on_submit(self, uid: int, prompt_len: int, step: int) -> None:
+        self.requests[uid] = RequestStats(uid, prompt_len, self.clock(),
+                                          arrival_step=step)
+
+    def on_prefill(self, uid: int, slot: int, step: int, n_tokens: int,
+                   dt_s: float) -> None:
+        r = self.requests[uid]
+        r.slot, r.prefill_step = slot, step
+        r.first_token_time = self.clock()
+        self.prefill_tokens += n_tokens
+        self.prefill_time_s += dt_s
+
+    def on_decode_step(self, n_active: int, dt_s: float) -> None:
+        self.decode_steps += 1
+        self.decode_tokens += n_active
+        self.decode_time_s += dt_s
+        self.occupancy_sum += n_active
+
+    def on_token(self, uid: int) -> None:
+        self.requests[uid].n_generated += 1
+
+    def on_finish(self, uid: int, step: int) -> None:
+        self.requests[uid].finish_step = step
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return (self.decode_tokens / self.decode_time_s
+                if self.decode_time_s else 0.0)
+
+    @property
+    def tokens_per_step(self) -> float:
+        return (self.decode_tokens / self.decode_steps
+                if self.decode_steps else 0.0)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return (self.occupancy_sum / self.decode_steps
+                if self.decode_steps else 0.0)
+
+    def mean_ttft_s(self) -> Optional[float]:
+        ts = [r.ttft_s for r in self.requests.values() if r.ttft_s is not None]
+        return sum(ts) / len(ts) if ts else None
+
+    def summary(self) -> dict:
+        return {
+            "requests": len(self.requests),
+            "finished": sum(1 for r in self.requests.values()
+                            if r.finish_step is not None),
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "decode_tokens_per_s": self.decode_tokens_per_s,
+            "tokens_per_step": self.tokens_per_step,
+            "mean_occupancy": self.mean_occupancy,
+            "mean_ttft_s": self.mean_ttft_s(),
+            "prefill_tokens": self.prefill_tokens,
+        }

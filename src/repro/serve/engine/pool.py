@@ -1,0 +1,63 @@
+"""Slot-pooled KV cache: a fixed pool of independent cache lanes.
+
+The pool is ``serving.init_cache(cfg, max_slots, max_len)`` — every cache
+leaf is laid out (G, B, ...) with the slot (batch) axis at position 1, so a
+lane is addressable as ``leaf[:, slot]`` uniformly across cache families
+(full append cache, local ring, cluster-paged routing pages, ssd/rglru
+state). On top of that layout this module provides jitted lane primitives:
+
+  write_slot(pool, slot, src)  — copy a B=1 cache (one freshly prefilled
+                                 request) into lane ``slot``
+  reset_slot(pool, slot)       — return lane ``slot`` to its
+                                 just-initialized state (zeros; local-ring
+                                 positions back to -1; routing cluster
+                                 pages emptied via rlen=0) with no
+                                 reallocation, so a freed lane is
+                                 immediately reusable
+  read_slot(pool, slot)        — extract lane ``slot`` as a B=1 cache
+
+Free/busy bookkeeping lives python-side in the engine; the pool itself is a
+pure pytree that flows through jit. ``slot`` may be a traced scalar.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serve.serving import cache_reset_value, init_cache
+
+
+def init_pool(cfg: ModelConfig, max_slots: int, max_len: int):
+    """A pool of ``max_slots`` independent cache lanes (one per request)."""
+    return init_cache(cfg, max_slots, max_len)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return ""
+
+
+@jax.jit
+def write_slot(pool, slot, src):
+    """Copy the single-lane cache ``src`` (B=1, same max_len) into ``slot``."""
+    return jax.tree.map(
+        lambda p, s: p.at[:, slot].set(s[:, 0].astype(p.dtype)), pool, src)
+
+
+@jax.jit
+def reset_slot(pool, slot):
+    """Reset lane ``slot`` to its init state (reusable, no reallocation)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf.at[:, slot].set(
+            jnp.asarray(cache_reset_value(_leaf_name(path)), leaf.dtype)),
+        pool)
+
+
+@jax.jit
+def read_slot(pool, slot):
+    """Lane ``slot`` as a B=1 cache (parity tests / debugging)."""
+    return jax.tree.map(
+        lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=1), pool)

@@ -1,0 +1,65 @@
+"""Per-request sampling, vectorized across heterogeneous pool slots.
+
+One jitted ``sample_tokens`` call handles the whole pool each step: every
+slot carries its own temperature / top-k / top-p (temperature 0 = greedy),
+and its own counter-based PRNG stream
+``fold_in(fold_in(PRNGKey(seed), uid), token_index)`` — so a request's
+sampled tokens are reproducible regardless of which slot it lands in or
+which co-tenants share the pool (required for the slot-parity guarantee).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = float("-inf")
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 => greedy (argmax)
+    top_k: int = 0               # 0 or >= vocab => disabled
+    top_p: float = 1.0           # >= 1 => disabled
+    seed: int = 0
+
+
+def request_base_key(params: SamplingParams, uid: int):
+    """Per-request key root; the engine folds the token index in on-device."""
+    return jax.random.fold_in(jax.random.PRNGKey(params.seed), uid)
+
+
+def request_key(params: SamplingParams, uid: int, token_index: int):
+    """Counter-based key: independent of slot placement and co-tenants."""
+    return jax.random.fold_in(request_base_key(params, uid), token_index)
+
+
+@jax.jit
+def sample_tokens(keys, logits, temperature, top_k, top_p):
+    """keys (B, key); logits (B,V); temperature/top_p (B,) f32; top_k (B,) i32.
+
+    Rows with temperature <= 0 take the argmax of the raw logits; the rest
+    are top-k then top-p filtered at their own temperature and sampled from
+    their own key. Returns (B,) int32.
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1)
+    scaled = lg / jnp.maximum(temperature, 1e-6)[:, None]
+    # per-row top-k: mask everything below the k-th largest logit
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], 1)
+    use_k = (top_k > 0) & (top_k < V)
+    scaled = jnp.where(use_k[:, None] & (scaled < kth), _NEG_INF, scaled)
+    # per-row nucleus: keep the smallest prefix of descending-prob tokens
+    # whose exclusive cumulative mass is < top_p (the top-1 always survives)
+    order = jnp.argsort(-scaled, axis=-1)
+    sorted_lg = jnp.take_along_axis(scaled, order, -1)
+    probs = jax.nn.softmax(sorted_lg, axis=-1)
+    keep_sorted = (jnp.cumsum(probs, -1) - probs) < top_p[:, None]
+    keep = jnp.take_along_axis(keep_sorted, jnp.argsort(order, -1), -1)
+    use_p = top_p < 1.0
+    scaled = jnp.where(use_p[:, None] & ~keep, _NEG_INF, scaled)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled).astype(jnp.int32)

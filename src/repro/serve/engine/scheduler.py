@@ -1,0 +1,50 @@
+"""FCFS admission with a token budget (preemption-free backpressure).
+
+Requests are admitted strictly in submission order: the head of the queue
+blocks until both a free slot AND token budget are available (no
+reordering, no preemption — predictable latency, no cache thrash). The
+token budget caps the total *reserved* context (prompt + max_new_tokens)
+summed over active slots, bounding worst-case in-flight memory even when
+max_slots is large relative to the pool's max_len.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+
+class FCFSScheduler:
+    """First-come-first-served queue with slot + token-budget gating."""
+
+    def __init__(self, token_budget: Optional[int] = None):
+        self.token_budget = token_budget
+        self._queue = deque()
+
+    def submit(self, request) -> None:
+        self._queue.append(request)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def has_uid(self, uid: int) -> bool:
+        return any(r.uid == uid for r in self._queue)
+
+    @staticmethod
+    def reserved_tokens(request) -> int:
+        """Worst-case context this request can occupy."""
+        return request.prompt_len + request.max_new_tokens
+
+    def next_admittable(self, free_slots: int, tokens_in_flight: int):
+        """Pop and return the head request if it can run now, else None.
+
+        Head-of-line blocking is deliberate: admitting a smaller request
+        from behind the head would starve long prompts under load.
+        """
+        if not self._queue or free_slots <= 0:
+            return None
+        head = self._queue[0]
+        if (self.token_budget is not None
+                and tokens_in_flight + self.reserved_tokens(head)
+                > self.token_budget):
+            return None
+        return self._queue.popleft()

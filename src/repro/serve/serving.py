@@ -35,9 +35,19 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.transformer import (build_segments, head_split,
-                                      _expand_kv, _routing_cfg)
+                                      _expand_kv, _routing_cfg, where_active)
 
 _BIG_NEG = -1e9
+
+# Fill values for cache leaves; every leaf not listed resets to 0. The slot
+# pool (serve/engine/pool.py) uses this to return a freed lane to its
+# just-initialized state without reallocation.
+CACHE_FILL_VALUES = {"lpos": -1}
+
+
+def cache_reset_value(leaf_name: str) -> int:
+    """Initial/reset fill value for a named cache leaf."""
+    return CACHE_FILL_VALUES.get(leaf_name, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +87,7 @@ def _slot_cache(spec, cfg: ModelConfig, B: int, max_len: int, dt):
         kvl = head_split(cfg)[2] if mode == "local+routing" else Hkv
         c["lk"] = jnp.zeros((B, kvl, 2 * W, dh), dt)
         c["lv"] = jnp.zeros((B, kvl, 2 * W, dh), dt)
-        c["lpos"] = jnp.full((B, 2 * W), -1, jnp.int32)
+        c["lpos"] = jnp.full((B, 2 * W), cache_reset_value("lpos"), jnp.int32)
     if mode in ("routing", "local+routing"):
         Hr = cfg.num_heads if mode == "routing" else head_split(cfg)[1]
         kc, cap = _routing_dims(cfg, max_len)
@@ -255,8 +265,14 @@ def _decode_layer(spec, p, kmu, cache, x, cfg, pos, image_embeds=None):
 def make_serve_step(cfg: ModelConfig):
     segments = build_segments(cfg)
 
-    def serve_step(params, kstate, cache, tokens, pos):
-        """tokens: (B,) int32; pos: (B,) int32 -> (logits (B,V), new_cache)."""
+    def serve_step(params, kstate, cache, tokens, pos, active=None):
+        """tokens: (B,) int32; pos: (B,) int32 -> (logits (B,V), new_cache).
+
+        ``active`` (B,) bool, optional: rows where it is False are decoded
+        as no-ops — their cache lanes come back bit-identical (the
+        continuous-batching engine uses this for free/finished slots; their
+        logits are garbage and must be ignored by the caller).
+        """
         x = L.embed(params["embed"], tokens[:, None])
         new_cache = []
         for si, (pattern, G) in enumerate(segments):
@@ -276,6 +292,8 @@ def make_serve_step(cfg: ModelConfig):
         x = L.apply_norm(params["final_norm"], x, cfg.norm)
         logits = L.logits_out(params["embed"], x, cfg.tie_embeddings,
                               cfg.logit_softcap)
+        if active is not None:
+            new_cache = where_active(active, new_cache, cache, batch_axis=1)
         from repro.models.model import mask_vocab_pad
         return mask_vocab_pad(logits, cfg)[:, 0], new_cache
 

@@ -41,6 +41,7 @@ def test_roundtrip(tmp_path):
     assert extra["loader"]["step"] == 7
 
 
+@pytest.mark.slow
 def test_restart_bit_exact(tmp_path):
     t_full = Trainer(RUN, _loader(), ckpt_dir=str(tmp_path / "a"),
                      ckpt_every=3)
@@ -88,6 +89,7 @@ def test_shape_mismatch_raises(tmp_path):
         mgr.restore({"w": jnp.ones((3,))})
 
 
+@pytest.mark.slow
 def test_preemption_checkpoints_and_stops(tmp_path):
     tr = Trainer(RUN, _loader(), ckpt_dir=str(tmp_path), ckpt_every=100)
     tr.init_or_restore()

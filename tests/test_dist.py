@@ -7,6 +7,11 @@ import sys
 
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist is not part of this build")
+
+pytestmark = pytest.mark.slow        # spawns 8-device subprocesses
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

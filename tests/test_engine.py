@@ -1,0 +1,356 @@
+"""Continuous-batching engine: end-to-end scheduling correctness, slot
+parity for routing heads, pool hygiene, admission policy, and sampling.
+
+The load-bearing guarantees:
+  * every request's output is exactly its solo-decode output, no matter
+    which slot it lands in, who its co-tenants are, or when it arrives;
+  * freed lanes are reused by later requests without reallocation;
+  * the engine finishes the same workload in fewer decode steps than
+    lock-step batching (the seed's fixed-batch loop).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, RoutingConfig
+from repro.models.model import init_model
+from repro.serve.engine import (FCFSScheduler, InferenceEngine, Request,
+                                SamplingParams, init_pool, read_slot,
+                                request_key, reset_slot, sample_tokens,
+                                write_slot)
+from repro.serve.serving import init_cache, make_serve_step, prefill
+
+CFG = ModelConfig(name="eng", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  attention="local+routing",
+                  routing=RoutingConfig(num_clusters=4, local_window=8),
+                  dtype="float32")
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    return init_model(CFG, jax.random.PRNGKey(0))
+
+
+def _mk_requests(n=12, prompt_lens=(5, 9, 14, 20), gen_lens=(3, 5, 7, 9, 4),
+                 arrival_every_other=True, seed=3):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for uid in range(n):
+        p = prompt_lens[uid % len(prompt_lens)]
+        g = gen_lens[(2 * uid + 1) % len(gen_lens)]
+        reqs.append(Request(
+            uid=uid, prompt=rng.randint(0, CFG.vocab_size, size=p).tolist(),
+            max_new_tokens=g,
+            arrival_step=(uid // 2 if arrival_every_other else 0)))
+    return reqs
+
+
+def _solo_reference(params, kstate, req, n_tokens=None):
+    """Greedy decode through the seed's single-batch make_serve_step path."""
+    n_tokens = n_tokens or req.max_new_tokens
+    cache = init_cache(CFG, 1, MAX_LEN)
+    lg, cache = prefill(params, kstate, cache,
+                        {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]},
+                        CFG)
+    step = jax.jit(make_serve_step(CFG))
+    toks = [int(jnp.argmax(lg[0, -1]))]
+    pos = req.prompt_len
+    while len(toks) < n_tokens:
+        lg1, cache = step(params, kstate, cache,
+                          jnp.asarray([toks[-1]], jnp.int32),
+                          jnp.asarray([pos], jnp.int32))
+        toks.append(int(jnp.argmax(lg1[0])))
+        pos += 1
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# End-to-end continuous batching (the acceptance test)
+# ---------------------------------------------------------------------------
+def test_continuous_batching_matches_solo(model):
+    """12 staggered requests over 4 slots: every output exactly equals its
+    solo decode; freed slots are reused; the pool fully drains."""
+    params, kstate = model
+    reqs = _mk_requests(n=12)
+    eng = InferenceEngine(CFG, params, kstate, max_slots=4, max_len=MAX_LEN)
+    out = eng.run(reqs)
+    for r in reqs:
+        assert out[r.uid] == _solo_reference(params, kstate, r), r.uid
+        assert r.state == "FINISHED"
+    # slot reuse: 12 requests over 4 slots forces lanes to be recycled
+    slot_of = {r.uid: eng.metrics.requests[r.uid].slot for r in reqs}
+    per_slot = {s: sum(1 for v in slot_of.values() if v == s)
+                for s in set(slot_of.values())}
+    assert max(per_slot.values()) >= 2, per_slot
+    assert all(s is None for s in eng.slots)          # pool drained
+    # continuous batching packs the pool: more useful tokens per step than
+    # one request at a time, and bounded by the slot count
+    assert 1.0 < eng.metrics.tokens_per_step <= 4.0
+
+
+def test_engine_beats_lockstep_tokens_per_step(model):
+    """Same workload, same kernels: the engine needs fewer decode steps
+    (and so fewer jitted-step wall-seconds) than lock-step batching."""
+    from benchmarks.serve_engine import (clone_requests, run_continuous,
+                                         run_lockstep, workload_max_len)
+    params, kstate = model
+    reqs = _mk_requests(n=12)
+    max_len = workload_max_len(reqs)
+    out_ls, ls = run_lockstep(CFG, params, kstate, clone_requests(reqs),
+                              4, max_len)
+    out_cb, cb = run_continuous(CFG, params, kstate, clone_requests(reqs),
+                                4, max_len)
+    assert out_cb == out_ls                       # identical generations
+    assert cb["decode_steps"] < ls["decode_steps"]
+    assert cb["tokens_per_step"] > ls["tokens_per_step"]
+
+
+@pytest.mark.slow
+def test_benchmark_reports_higher_decode_throughput():
+    """Wall-clock acceptance: benchmarks/serve_engine.py's workload gives
+    the engine higher aggregate decode tokens/sec than lock-step."""
+    from benchmarks.serve_engine import (build_model, clone_requests,
+                                         make_workload, run_continuous,
+                                         run_lockstep, workload_max_len)
+    cfg, params, kstate = build_model()
+    reqs = make_workload(cfg, n_requests=12)
+    max_len = workload_max_len(reqs)
+    # best-of-2 per scheduler: wall timings on shared CI machines are noisy
+    ls = max((run_lockstep(cfg, params, kstate, clone_requests(reqs), 4,
+                           max_len)[1] for _ in range(2)),
+             key=lambda s: s["decode_tokens_per_s"])
+    cb = max((run_continuous(cfg, params, kstate, clone_requests(reqs), 4,
+                             max_len)[1] for _ in range(2)),
+             key=lambda s: s["decode_tokens_per_s"])
+    assert cb["tokens_per_step"] > ls["tokens_per_step"]
+    assert cb["decode_tokens_per_s"] > ls["decode_tokens_per_s"], (cb, ls)
+
+
+# ---------------------------------------------------------------------------
+# Slot parity of routing heads (satellite)
+# ---------------------------------------------------------------------------
+def test_routing_slot_parity_bitwise(model):
+    """A request decoded in slot 3 of a busy pool produces bit-identical
+    logits to the same request decoded alone in slot 0, and matches the
+    seed's single-batch make_serve_step path."""
+    params, kstate = model
+    rng = np.random.RandomState(11)
+    target = lambda: Request(uid=99, prompt=rng_prompt, max_new_tokens=7)
+    rng_prompt = rng.randint(0, CFG.vocab_size, size=13).tolist()
+    tenants = [Request(uid=i, prompt=rng.randint(
+        0, CFG.vocab_size, size=6 + i).tolist(), max_new_tokens=9)
+        for i in range(3)]
+
+    # run A: three co-tenants admitted first -> target lands in slot 3
+    eng_a = InferenceEngine(CFG, params, kstate, max_slots=4,
+                            max_len=MAX_LEN, record_logits=True)
+    out_a = eng_a.run(tenants + [target()])
+    assert eng_a.metrics.requests[99].slot == 3
+
+    # run B: target alone in the same-size pool -> slot 0
+    eng_b = InferenceEngine(CFG, params, kstate, max_slots=4,
+                            max_len=MAX_LEN, record_logits=True)
+    out_b = eng_b.run([target()])
+    assert eng_b.metrics.requests[99].slot == 0
+
+    assert out_a[99] == out_b[99]
+    la, lb = eng_a.logits_trace[99], eng_b.logits_trace[99]
+    assert len(la) == len(lb) == 7
+    for step_a, step_b in zip(la, lb):
+        assert np.array_equal(step_a, step_b)     # BIT-identical
+
+    # seed path: same tokens, logits equal to numerical tolerance
+    solo = _solo_reference(params, kstate, target())
+    assert out_a[99] == solo
+
+
+def test_sampled_outputs_independent_of_co_tenants(model):
+    """Counter-based PRNG streams: a stochastic request's tokens do not
+    change when its pool neighbours change."""
+    params, kstate = model
+    rng = np.random.RandomState(4)
+    sp = SamplingParams(temperature=0.9, top_k=20, top_p=0.9, seed=5)
+    mk = lambda: Request(uid=50, prompt=rng_prompt, max_new_tokens=6,
+                         sampling=sp)
+    rng_prompt = rng.randint(0, CFG.vocab_size, size=8).tolist()
+    outs = []
+    for tenant_seed in (1, 2):
+        tenants = [Request(uid=i, prompt=np.random.RandomState(
+            tenant_seed + i).randint(0, CFG.vocab_size, size=5 + i).tolist(),
+            max_new_tokens=8, sampling=SamplingParams(temperature=1.1,
+                                                      seed=tenant_seed))
+            for i in range(2)]
+        eng = InferenceEngine(CFG, params, kstate, max_slots=3,
+                              max_len=MAX_LEN)
+        outs.append(eng.run(tenants + [mk()])[50])
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Pool hygiene
+# ---------------------------------------------------------------------------
+def test_reset_slot_restores_init_state(model):
+    """A freed lane equals a freshly allocated lane, leaf for leaf —
+    routing cluster pages emptied, local ring positions back to -1."""
+    params, kstate = model
+    fresh = init_pool(CFG, 3, MAX_LEN)
+    pool = fresh
+    lane = init_cache(CFG, 1, MAX_LEN)
+    toks = jnp.arange(12, dtype=jnp.int32)[None] % CFG.vocab_size
+    _, lane = prefill(params, kstate, lane, {"tokens": toks}, CFG)
+    pool = write_slot(pool, 1, lane)
+    dirty = sum(int((a != b).sum()) for a, b in
+                zip(jax.tree.leaves(pool), jax.tree.leaves(fresh)))
+    assert dirty > 0                                # prefill really landed
+    pool = reset_slot(pool, 1)
+    for a, b in zip(jax.tree.leaves(pool), jax.tree.leaves(fresh)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_read_slot_roundtrip(model):
+    params, kstate = model
+    pool = init_pool(CFG, 2, MAX_LEN)
+    lane = init_cache(CFG, 1, MAX_LEN)
+    toks = jnp.arange(9, dtype=jnp.int32)[None] % CFG.vocab_size
+    _, lane = prefill(params, kstate, lane, {"tokens": toks}, CFG)
+    pool = write_slot(pool, 1, lane)
+    back = read_slot(pool, 1)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(lane)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Scheduling / admission
+# ---------------------------------------------------------------------------
+def test_fcfs_scheduler_slot_and_budget_gating():
+    sched = FCFSScheduler(token_budget=25)
+    reqs = [Request(uid=i, prompt=[1] * 6, max_new_tokens=4)
+            for i in range(4)]                      # 10 reserved tokens each
+    for r in reqs:
+        sched.submit(r)
+    assert sched.next_admittable(0, 0) is None      # no free slot
+    a = sched.next_admittable(4, 0)
+    b = sched.next_admittable(3, 10)
+    assert (a.uid, b.uid) == (0, 1)                 # FCFS order
+    assert sched.next_admittable(2, 20) is None     # 20 + 10 > budget 25
+    c = sched.next_admittable(2, 10)                # backpressure released
+    assert c.uid == 2 and len(sched) == 1
+
+
+def test_engine_token_budget_backpressure(model):
+    """Budget that fits one request at a time: occupancy never exceeds 1
+    even with free slots, and everything still finishes correctly."""
+    params, kstate = model
+    reqs = _mk_requests(n=3, arrival_every_other=False)
+    budget = max(FCFSScheduler.reserved_tokens(r) for r in reqs)
+    eng = InferenceEngine(CFG, params, kstate, max_slots=2, max_len=MAX_LEN,
+                          token_budget=budget)
+    out = eng.run(reqs)
+    assert eng.metrics.mean_occupancy <= 1.0
+    for r in reqs:
+        assert out[r.uid] == _solo_reference(params, kstate, r)
+
+
+def test_eos_termination(model):
+    params, kstate = model
+    req = _mk_requests(n=1, prompt_lens=(10,), gen_lens=(9,),
+                       arrival_every_other=False)[0]
+    solo = _solo_reference(params, kstate, req)
+    eos = solo[2]
+    stop_at = solo.index(eos) + 1
+    eng = InferenceEngine(CFG, params, kstate, max_slots=2, max_len=MAX_LEN)
+    out = eng.run([dataclasses.replace(req, eos_id=eos, output=[])])
+    assert out[req.uid] == solo[:stop_at]
+
+
+def test_submit_validation(model):
+    params, kstate = model
+    eng = InferenceEngine(CFG, params, kstate, max_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=[1] * 12, max_new_tokens=8))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=1, prompt=[], max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# Sampling unit tests
+# ---------------------------------------------------------------------------
+def _sample(logits, sp: SamplingParams, uid=0, idx=0):
+    return int(sample_tokens(
+        request_key(sp, uid, idx)[None], jnp.asarray(logits)[None],
+        jnp.asarray([sp.temperature], jnp.float32),
+        jnp.asarray([sp.top_k], jnp.int32),
+        jnp.asarray([sp.top_p], jnp.float32))[0])
+
+
+def test_sampling_greedy_and_degenerate_filters():
+    rng = np.random.RandomState(0)
+    logits = rng.randn(64).astype(np.float32)
+    best = int(np.argmax(logits))
+    assert _sample(logits, SamplingParams()) == best
+    assert _sample(logits, SamplingParams(temperature=1.3, top_k=1)) == best
+    assert _sample(logits, SamplingParams(temperature=1.3,
+                                          top_p=1e-6)) == best
+
+
+def test_sampling_topk_support_and_determinism():
+    rng = np.random.RandomState(1)
+    logits = rng.randn(64).astype(np.float32)
+    top3 = set(np.argsort(-logits)[:3].tolist())
+    sp = SamplingParams(temperature=1.0, top_k=3, seed=7)
+    draws = {_sample(logits, sp, idx=i) for i in range(40)}
+    assert draws <= top3 and len(draws) > 1
+    assert _sample(logits, sp, idx=5) == _sample(logits, sp, idx=5)
+
+
+def test_sampling_heterogeneous_rows_vectorized():
+    """One call, per-row settings: greedy row + filtered stochastic row."""
+    rng = np.random.RandomState(2)
+    logits = rng.randn(2, 32).astype(np.float32)
+    keys = jnp.stack([request_key(SamplingParams(seed=0), 0, 0),
+                      request_key(SamplingParams(seed=1), 1, 0)])
+    toks = sample_tokens(keys, jnp.asarray(logits),
+                         jnp.asarray([0.0, 1.0], jnp.float32),
+                         jnp.asarray([0, 4], jnp.int32),
+                         jnp.asarray([1.0, 0.95], jnp.float32))
+    assert int(toks[0]) == int(np.argmax(logits[0]))
+    assert int(toks[1]) in set(np.argsort(-logits[1])[:4].tolist())
+
+
+# ---------------------------------------------------------------------------
+# Family coverage: the engine reuses every family's cache unchanged
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_hybrid_family(model):
+    cfg = ModelConfig(name="eng-h", family="hybrid", num_layers=3,
+                      d_model=64, num_heads=4, num_kv_heads=1, d_ff=128,
+                      vocab_size=64, attention="local", attn_window=8,
+                      hybrid_pattern=("rglru", "rglru", "attn"),
+                      dtype="float32")
+    params, kstate = init_model(cfg, jax.random.PRNGKey(1))
+    rng = np.random.RandomState(5)
+    reqs = [Request(uid=i, prompt=rng.randint(0, 64, size=6 + 2 * i).tolist(),
+                    max_new_tokens=4 + i) for i in range(3)]
+    eng = InferenceEngine(cfg, params, kstate, max_slots=2, max_len=32)
+    out = eng.run(reqs)
+
+    step = jax.jit(make_serve_step(cfg))
+    for r in reqs:
+        cache = init_cache(cfg, 1, 32)
+        lg, cache = prefill(
+            params, kstate, cache,
+            {"tokens": jnp.asarray(r.prompt, jnp.int32)[None]}, cfg)
+        toks = [int(jnp.argmax(lg[0, -1]))]
+        pos = r.prompt_len
+        while len(toks) < r.max_new_tokens:
+            lg1, cache = step(params, kstate, cache,
+                              jnp.asarray([toks[-1]], jnp.int32),
+                              jnp.asarray([pos], jnp.int32))
+            toks.append(int(jnp.argmax(lg1[0])))
+            pos += 1
+        assert out[r.uid] == toks, r.uid

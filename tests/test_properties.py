@@ -1,5 +1,8 @@
 """Hypothesis property tests on system invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install -e .[property]")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -8,7 +11,6 @@ from hypothesis import given, settings
 
 from repro.core.kmeans import cluster_scores, init_kmeans, normalize_routing
 from repro.core.routing import balanced_topk
-from repro.dist.compression import _dequant, _quant
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=20,
@@ -69,6 +71,9 @@ def test_online_softmax_merge_associative(seed, n):
 @given(seed=st.integers(0, 99), scale=st.floats(1e-3, 1e3))
 def test_int8_quantization_error_bound(seed, scale):
     """|x - dequant(quant(x))| <= max|x| / 254 elementwise."""
+    _compression = pytest.importorskip(
+        "repro.dist.compression", reason="repro.dist is not part of this build")
+    _quant, _dequant = _compression._quant, _compression._dequant
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.randn(64).astype(np.float32) * scale)
     q, s = _quant(x)

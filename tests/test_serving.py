@@ -52,6 +52,7 @@ def test_decode_ssm():
                      ssm_chunk=16, dtype="float32"))
 
 
+@pytest.mark.slow
 def test_decode_hybrid():
     _run(ModelConfig(name="h", family="hybrid", num_layers=6, d_model=64,
                      num_heads=4, num_kv_heads=1, d_ff=128, vocab_size=64,
@@ -60,6 +61,7 @@ def test_decode_hybrid():
                      attn_window=16, dtype="float32"))
 
 
+@pytest.mark.slow
 def test_decode_moe():
     _run(ModelConfig(name="m", family="moe", moe_experts=4, moe_interleave=2,
                      moe_capacity_factor=8.0, **BASE))

@@ -11,6 +11,8 @@ from repro.configs.base import RunConfig, TrainConfig, with_overrides
 from repro.models.model import init_model, apply_model
 from repro.train.train_step import init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow        # full-family train/forward integration
+
 ASSIGNED = [a for a in ARCHS if not a.startswith("rt-")]
 B, S = 2, 64
 

@@ -38,11 +38,13 @@ def _fit(run, task="markov"):
     return losses, ts
 
 
+@pytest.mark.slow
 def test_loss_decreases_routing_transformer():
     losses, _ = _fit(_small_run())
     assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     """A=2 accumulation == A=1 on the same global batch (fp32, tight tol)."""
     r1 = _small_run(steps=1, grad_accum=1, attention="full")
@@ -58,6 +60,7 @@ def test_grad_accum_equivalence():
     assert tree_maxdiff(ts1.params, ts2.params) < 5e-5
 
 
+@pytest.mark.slow
 def test_remat_matches_no_remat():
     r1 = _small_run(steps=1, remat="none", attention="full")
     r2 = _small_run(steps=1, remat="full", attention="full")

@@ -12,11 +12,16 @@ refilled mid-flight instead of idling until the group drains.
 Arrival staggering is ignored for the lock-step baseline (generous to it).
 
 Run:  PYTHONPATH=src python benchmarks/serve_engine.py
+CI:   PYTHONPATH=src python benchmarks/serve_engine.py --smoke \
+          --json benchmarks/serve_engine_smoke.json --min-speedup 1.2
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import functools
+import json
+import sys
 import time
 from typing import Dict, List, Tuple
 
@@ -136,9 +141,25 @@ def run_lockstep(cfg, params, kstate, requests, max_slots: int,
     }
 
 
-def main() -> None:
-    cfg, params, kstate = build_model()
-    requests = make_workload(cfg, n_requests=12)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller model + workload (CI regression gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if continuous-batching decode tok/s "
+                         "< this multiple of lock-step (or outputs differ)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg, params, kstate = build_model(num_layers=2, d_model=128,
+                                          num_heads=4, num_kv_heads=2,
+                                          d_ff=256)
+        requests = make_workload(cfg, n_requests=8)
+    else:
+        cfg, params, kstate = build_model()
+        requests = make_workload(cfg, n_requests=12)
     max_slots = 4
     max_len = workload_max_len(requests)
     print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
@@ -166,6 +187,30 @@ def main() -> None:
           f"{ls['tokens_per_step']:.2f}); "
           f"mean occupancy {cb['mean_occupancy']:.2f}/{max_slots}, "
           f"mean TTFT {cb['mean_ttft_s']*1e3:.0f} ms")
+
+    if args.json:
+        record = {"smoke": args.smoke, "model": cfg.name,
+                  "params_m": cfg.param_count() / 1e6,
+                  "n_requests": len(requests), "max_slots": max_slots,
+                  "max_len": max_len, "outputs_identical": match,
+                  # None, not NaN: strict JSON parsers reject bare NaN
+                  "speedup_tokens_per_s": (speedup if speedup == speedup
+                                           else None),
+                  "lockstep": ls, "continuous": cb}
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    if args.min_speedup is not None:
+        if not match:
+            print("FAIL: scheduler outputs diverged", file=sys.stderr)
+            sys.exit(1)
+        if not speedup >= args.min_speedup:    # NaN fails the gate too
+            print(f"FAIL: continuous batching {speedup:.2f}x < required "
+                  f"{args.min_speedup:.2f}x lock-step", file=sys.stderr)
+            sys.exit(1)
+        print(f"speedup gate passed: {speedup:.2f}x >= "
+              f"{args.min_speedup:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,10 @@
+"""Distribution subsystem: SPMD sharding rules for ("data", "model")
+meshes and int8 wire compression for gradient collectives.
+
+  sharding     one source of truth for how every pytree in the system is
+               partitioned (params/opt state, batches, activations,
+               decode caches) — see DESIGN.md §6 for the rule table.
+  compression  `int8_psum_mean`, a chunked int8-quantized allreduce that
+               keeps fp32 tensors off the interconnect.
+"""
+from repro.dist import compression, sharding  # noqa: F401

@@ -1,0 +1,75 @@
+"""Gradient wire compression: chunked int8-quantized allreduce.
+
+``int8_psum_mean(x, axis_name)`` is a drop-in for
+``jax.lax.pmean(x, axis_name)`` inside ``shard_map`` that moves int8
+payloads over the interconnect instead of fp32:
+
+  1. the local tensor is flattened, padded, and split into ``axis_size``
+     equal chunks; each chunk is group-quantized (symmetric int8, one
+     fp32 scale per ``group`` values);
+  2. one ``all_to_all`` exchanges the int8 chunks (plus the tiny fp32
+     scales) so device j holds every device's j-th chunk — a
+     reduce-scatter at 1/4 of the fp32 payload width;
+  3. each device dequantizes and averages its chunk in fp32, re-quantizes
+     the result, and an int8 ``all_gather`` rebuilds the full mean
+     everywhere.
+
+Wire bytes per device: ~2·N/4 (+ N/group fp32 scales) versus ~2·N for a
+ring fp32 allreduce. The fp32 accumulation happens device-local, so the
+only losses are the two quantization hops, each bounded by the per-group
+amax/254; with the default group of 128 the end-to-end relative error on
+gradient-like tensors is ~1% (checked against the exact fp32 mean, and
+the HLO is asserted to carry ``s8[`` collective payloads and no full-
+width fp32 tensor, in tests/test_dist.py::test_int8_wire_allreduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def _quantize(x: jax.Array, group: int):
+    """(..., M) fp32 -> int8 codes (..., M) + scales (..., M // group)."""
+    g = x.reshape(x.shape[:-1] + (x.shape[-1] // group, group))
+    amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale[..., 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, group: int) -> jax.Array:
+    g = q.astype(jnp.float32).reshape(
+        q.shape[:-1] + (q.shape[-1] // group, group))
+    return (g * scale[..., None]).reshape(q.shape)
+
+
+def int8_psum_mean(x: jax.Array, axis_name: str, *,
+                   group: int = 128) -> jax.Array:
+    """Mean of ``x`` over the mapped axis with int8 wire format.
+
+    Call inside ``shard_map``/``pmap`` where ``axis_name`` is bound.
+    Shape- and dtype-preserving; accumulation is fp32 regardless of the
+    input dtype.
+    """
+    n = jax.lax.psum(1, axis_name)          # static axis size
+    if n == 1:
+        return x
+    shape, dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % (n * group)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    chunks = flat.reshape(n, -1)            # row j is bound for device j
+    q, s = _quantize(chunks, group)
+    q = jax.lax.all_to_all(q, axis_name, 0, 0)       # s8 on the wire
+    s = jax.lax.all_to_all(s, axis_name, 0, 0)
+    mean = jnp.mean(_dequantize(q, s, group), axis=0)
+    q2, s2 = _quantize(mean, group)
+    q2 = jax.lax.all_gather(q2, axis_name, axis=0, tiled=True)   # s8 again
+    s2 = jax.lax.all_gather(s2, axis_name, axis=0, tiled=True)
+    out = _dequantize(q2, s2, group)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape).astype(dtype)

@@ -1,0 +1,242 @@
+"""Production SPMD sharding rules for ("data", "model") meshes.
+
+One source of truth for how every pytree in the system is laid out
+(DESIGN.md §6 has the full rule table):
+
+  params / optimizer state   Megatron-style tensor parallelism over
+      "model": column-parallel up/qkv projections (output dim sharded),
+      row-parallel down/out projections (input dim sharded), vocab-
+      parallel embedding. With ``fsdp=True`` each 2D weight is
+      additionally sharded over the data axes on its non-model dim
+      (zero-3; used for the >20B configs, see launch/dryrun.py).
+  batches                    leading (batch) dim over the data axes.
+  activations                ``make_constrain_fn(mesh, seq_parallel)``
+      builds the constraint applied between scan groups in
+      models/transformer.apply_stack: batch over "data" and — with
+      sequence parallelism — the sequence dim over "model", re-gathered
+      by the function's ``.epilogue`` before the LM head.
+  decode caches / slot pools  slot axis (position 1) over the data axes
+      and head axes over "model" (serve/engine continuous batching).
+
+Rules are name-based over the leaf *path*: adam's m/v moment trees
+reuse the param leaf names, so optimizer state inherits the param
+layout for free, while adafactor's factored statistics (vr/vc) stay
+replicated (they are sublinear-size by construction). Every assignment
+is shape-checked — a dim that does not divide its mesh axis falls back
+to replicated for that dim. Sharding here is purely a layout choice;
+GSPMD semantics guarantee the partitioned program computes the same
+function as the single-device one (parity tested in tests/test_dist.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Column-parallel 2D cores (d_in, d_out): d_out over "model". The
+# contraction dim stays whole — no collective until the row-parallel
+# partner. Leading stacked dims (scan groups G, MoE experts E) are
+# handled by indexing from the end of the shape.
+_COL_PARALLEL = {"wq", "wk", "wv", "w_up", "w_gate", "in_proj", "w_in",
+                 "w_gate_branch", "w_a", "w_x", "unembed"}
+# Row-parallel (d_in, d_out): d_in over "model" — consumes the
+# column-parallel layout with a single psum on the way out.
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "w_out"}
+_MODEL_BIAS = {"bq", "bk", "bv"}       # follow their column-parallel weight
+_VOCAB_PARALLEL = {"tok"}              # (V, d): padded vocab over "model"
+# Small / irregular leaves that stay replicated: norm affines, router
+# (d, E) with tiny E, depthwise convs, SSD per-head scalars, gates, and
+# adafactor's factored moments (vr/vc drop a dim vs their param, so the
+# name-based weight rules must not fire through them).
+_REPLICATED = {"vr", "vc", "scale", "bias", "router", "conv_w", "conv_b",
+               "A_log", "D", "dt_bias", "b_a", "b_x", "mask_emb",
+               "xgate_attn", "xgate_ffn", "count"}
+
+# Decode-cache leaves laid out (G, B, H, ...) — head axis at position 2.
+_CACHE_HEAD_LEAVES = {"k", "v", "lk", "lv", "rk", "rv", "rlen", "state"}
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+def _axis_size(mesh, axis) -> int:
+    """Devices along ``axis``; axis may be a name, a tuple of names, or
+    None. Names absent from the mesh count as size 1."""
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= _axis_size(mesh, a)
+        return n
+    return dict(mesh.shape).get(axis, 1)
+
+
+def dp_axes(mesh):
+    """The data-parallel axes: multi-pod meshes fold "pod" into them."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _fits(shape, dim, mesh, axis) -> bool:
+    size = _axis_size(mesh, axis)
+    return size > 1 and shape[dim] % size == 0
+
+
+def _path_names(path):
+    return [e.key for e in path if isinstance(e, jax.tree_util.DictKey)]
+
+
+# ---------------------------------------------------------------------------
+# Parameter / optimizer-state rules
+# ---------------------------------------------------------------------------
+def _leaf_spec(path, leaf, mesh, fsdp: bool) -> NamedSharding:
+    names = _path_names(path)
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    dp = dp_axes(mesh)
+    spec = [None] * nd
+    rule = None
+    # innermost recognized name wins (optimizer wrappers keep param names
+    # as the path suffix; adafactor stats hit _REPLICATED first)
+    for name in reversed(names):
+        if name in _REPLICATED:
+            rule = "repl"
+        elif name in _COL_PARALLEL and nd >= 2:
+            rule = "col"
+        elif name in _ROW_PARALLEL and nd >= 2:
+            rule = "row"
+        elif name in _MODEL_BIAS and nd >= 1:
+            rule = "bias"
+        elif name in _VOCAB_PARALLEL and nd >= 2:
+            rule = "vocab"
+        if rule:
+            break
+    if rule == "col":
+        if _fits(shape, nd - 1, mesh, "model"):
+            spec[nd - 1] = "model"
+        if fsdp and _fits(shape, nd - 2, mesh, dp):
+            spec[nd - 2] = dp
+    elif rule == "row":
+        if _fits(shape, nd - 2, mesh, "model"):
+            spec[nd - 2] = "model"
+        if fsdp and _fits(shape, nd - 1, mesh, dp):
+            spec[nd - 1] = dp
+    elif rule == "bias":
+        if _fits(shape, nd - 1, mesh, "model"):
+            spec[nd - 1] = "model"
+    elif rule == "vocab":
+        if _fits(shape, nd - 2, mesh, "model"):
+            spec[nd - 2] = "model"
+        if fsdp and _fits(shape, nd - 1, mesh, dp):
+            spec[nd - 1] = dp
+    return NamedSharding(mesh, P(*spec))
+
+
+def params_sharding(mesh, params, fsdp: bool = False):
+    """Name-rule sharding for a param-shaped tree (params, adam moments,
+    grads — anything whose leaf paths end in the param names)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: _leaf_spec(p, leaf, mesh, fsdp), params)
+
+
+def kstate_sharding(mesh, kstate):
+    """k-means centroid state, leaves (G, Hr, kc, dh): routing-head axis
+    over "model" (aligned with the head-sharded attention), else
+    replicated."""
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 3 and _fits(leaf.shape, 1, mesh, "model"):
+            spec[1] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, kstate)
+
+
+def train_state_sharding(mesh, ts, fsdp: bool = False):
+    """Sharding tree for a TrainState (params, kstate, opt_state, step).
+
+    ``ts`` may hold arrays or ShapeDtypeStructs (jax.eval_shape output).
+    The optimizer state goes through the same name rules as the params:
+    adam's m/v mirror the param layout, adafactor's factored stats and
+    both counters replicate.
+    """
+    from repro.train.train_step import TrainState
+    return TrainState(
+        params=params_sharding(mesh, ts.params, fsdp),
+        kstate=kstate_sharding(mesh, ts.kstate),
+        opt_state=params_sharding(mesh, ts.opt_state, fsdp),
+        step=NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# Data / activation / cache rules
+# ---------------------------------------------------------------------------
+def batch_sharding(mesh, batch):
+    """Input batches: leading dim over the data axes (when it divides)."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 1 and _fits(leaf.shape, 0, mesh, dp):
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch)
+
+
+def replicated(mesh, tree):
+    """Fully replicated sharding tree (metrics, small shared state)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def cache_sharding(mesh, cache, batch: int):
+    """Decode caches / engine slot pools: every leaf is (G, B, ...) with
+    the slot (batch) axis at position 1 — slots over the data axes and
+    the head axis (position 2 of attention/SSD leaves) over "model"."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        spec = [None] * leaf.ndim
+        if (leaf.ndim >= 2 and leaf.shape[1] == batch
+                and _fits(leaf.shape, 1, mesh, dp)):
+            spec[1] = dp
+        if (name in _CACHE_HEAD_LEAVES and leaf.ndim >= 3
+                and _fits(leaf.shape, 2, mesh, "model")):
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def make_constrain_fn(mesh, seq_parallel: bool = False):
+    """Activation constraint for the residual stream, applied between
+    scan groups (models/transformer.apply_stack) and at stack entry.
+
+    x is (B, N, d): batch over the data axes; with ``seq_parallel`` the
+    sequence dim is additionally sharded over "model" (Megatron-SP — the
+    norm/FFN work between attention blocks runs on 1/TP of the tokens).
+    The returned function carries an ``.epilogue`` attribute (only when
+    seq_parallel) that re-gathers the sequence dim before the LM head,
+    keeping the vocab-parallel logits layout intact.
+
+    Dims that do not divide their axis stay unconstrained — GSPMD picks.
+    """
+    dp = dp_axes(mesh)
+
+    def constrain(x):
+        if getattr(x, "ndim", 0) != 3:
+            return x
+        B, N, _ = x.shape
+        spec = P(dp if _fits(x.shape, 0, mesh, dp) else None,
+                 "model" if (seq_parallel and _fits(x.shape, 1, mesh,
+                                                    "model")) else None,
+                 None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    if seq_parallel:
+        def epilogue(x):
+            spec = P(dp if _fits(x.shape, 0, mesh, dp) else None, None, None)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        constrain.epilogue = epilogue
+    return constrain

@@ -1,7 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
-                           or "--xla_force_host_platform_device_count=512")
-# ^ MUST precede every other import: jax locks the device count on first init.
+_flags = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+          or os.environ.get("XLA_FLAGS"))
+if _flags is None:
+    _flags = "--xla_force_host_platform_device_count=512"
+elif ("xla_force_host_platform_device_count" not in _flags
+      and not os.environ.get("REPRO_DRYRUN_XLA_FLAGS")):
+    # unrelated ambient XLA_FLAGS (dump dirs etc.): keep them AND the
+    # forced device count the dry-run needs
+    _flags += " --xla_force_host_platform_device_count=512"
+os.environ["XLA_FLAGS"] = _flags
+# ^ MUST precede every other import: jax locks the device count on first
+# init. An XLA_FLAGS that already forces a device count (the multi-device
+# CI lane forces 8) wins over the 512-device dry-run default.
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
 
@@ -312,6 +322,8 @@ def cell_status(arch: str, cell_name: str, variant: str) -> str:
 def analyze(compiled) -> Dict[str, Any]:
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # jaxlib <= 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     return {
         "flops_per_device": float(ca.get("flops", 0.0)),

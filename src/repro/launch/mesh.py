@@ -2,6 +2,8 @@
 never touches jax device state (the dry-run must set XLA_FLAGS first)."""
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
 
 
@@ -11,9 +13,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def feasible_mesh_shape(n: int, data: int, model: int) -> Tuple[int, int]:
+    """Largest (data, model) grid that fits on ``n`` devices.
+
+    When the request fits, it is returned unchanged. When it oversubscribes,
+    the model axis is preserved as far as possible — clamped to the largest
+    divisor of ``n`` not exceeding the request — and data fills the rest,
+    instead of silently dropping model parallelism altogether.
+    """
+    if data * model <= n:
+        return data, model
+    model = max(m for m in range(1, min(model, n) + 1) if n % m == 0)
+    return n // model, model
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
-    if data * model > n:
-        data, model = n, 1
+    data, model = feasible_mesh_shape(n, data, model)
     return jax.make_mesh((data, model), ("data", "model"))

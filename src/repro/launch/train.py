@@ -20,6 +20,7 @@ from repro.configs import ARCHS, get_config, reduced_config
 from repro.configs.base import RunConfig, TrainConfig, with_overrides
 from repro.data.synthetic import SyntheticLoader
 from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
 from repro.train.train_step import init_train_state, make_train_step
 from repro.train.trainer import Trainer
 
@@ -48,7 +49,8 @@ def main():
         d, m = (int(x) for x in args.mesh.split("x"))
     else:
         d, m = n, 1
-    mesh = jax.make_mesh((d, m), ("data", "model"))
+    mesh = make_host_mesh(d, m)      # clamps oversubscribed requests
+    d, m = mesh.shape["data"], mesh.shape["model"]
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"mesh=({d}x{m}) devices={n}")
 
@@ -59,10 +61,19 @@ def main():
     constrain = shd.make_constrain_fn(mesh, args.seq_parallel)
     fn = make_train_step(run, constrain_fn=constrain)
 
+    def pinned_fn(ts, batch):
+        # pin the output state to the rule layout so it round-trips into
+        # the next step's in_shardings (GSPMD would otherwise pick its own
+        # layout for unconstrained outputs, e.g. scanned norm scales)
+        new_ts, metrics = fn(ts, batch)
+        new_ts = jax.tree.map(jax.lax.with_sharding_constraint,
+                              new_ts, ts_spec)
+        return new_ts, metrics
+
     def sharded_step(ts, batch):
         b_spec = shd.batch_sharding(mesh, batch)
         batch = jax.device_put(batch, b_spec)
-        return jax.jit(fn, in_shardings=(ts_spec, b_spec),
+        return jax.jit(pinned_fn, in_shardings=(ts_spec, b_spec),
                        donate_argnums=(0,))(ts, batch)
 
     loader = SyntheticLoader("markov", min(cfg.vocab_size, 512),
@@ -70,7 +81,7 @@ def main():
     with mesh:
         ts = jax.device_put(init_train_state(run, jax.random.PRNGKey(0)),
                             ts_spec)
-        tr = Trainer(run, loader, ckpt_dir=args.ckpt_dir,
+        tr = Trainer(run, loader, ckpt_dir=args.ckpt_dir, mesh=mesh,
                      shardings=ts_spec, step_fn=sharded_step)
         tr.state = ts
         out = tr.fit(args.steps)

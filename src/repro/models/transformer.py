@@ -343,6 +343,10 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_seg_kstate = []
     constrain = constrain_fn or (lambda t: t)
+    # constrain the embedding output too: with sequence parallelism the
+    # residual stream must enter the first scan group already seq-sharded,
+    # or GSPMD keeps a replicated copy alive until the first group boundary
+    x = constrain(x)
     layer_counter = 0
     for si, (pattern, G) in enumerate(segments):
 

@@ -103,12 +103,13 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params, kstate, *, max_slots: int,
                  max_len: int, token_budget: Optional[int] = None,
-                 record_logits: bool = False):
+                 record_logits: bool = False, mesh=None):
         self.cfg = cfg
         self.params = params
         self.kstate = kstate
         self.max_slots = max_slots
         self.max_len = max_len
+        self.mesh = mesh
         # the engine owns self.pool exclusively and reassigns it on every
         # call, so the decode steps donate it for in-place cache updates
         # (donation is a no-op warning on backends that lack aliasing)
@@ -121,6 +122,26 @@ class InferenceEngine:
         # prefill never mutates its cache argument (functional), so one
         # fresh B=1 lane serves every admission without reallocation
         self._fresh_lane = init_cache(cfg, 1, max_len)
+        if mesh is not None:
+            # SPMD serving: slots over the data axes, attention heads over
+            # "model" (dist/sharding rules). Inputs are committed once here;
+            # every jitted step then computes with the sharded layouts and
+            # preserves them through the donated pool. Per-lane math is
+            # unchanged, so solo-decode parity holds on any mesh (tested).
+            # The k-means centroids stay replicated: they are tiny
+            # (Hr*kc*dh floats) and head-sharding them changes fusion-level
+            # rounding of the cluster scores, whose argmax is discrete —
+            # replication keeps routed decode bit-stable across meshes.
+            from repro.dist import sharding as shd
+            pool_spec = shd.cache_sharding(
+                mesh, jax.eval_shape(lambda: self.pool), max_slots)
+            self.params = jax.device_put(params,
+                                         shd.replicated(mesh, params))
+            self.kstate = jax.device_put(kstate,
+                                         shd.replicated(mesh, kstate))
+            self.pool = jax.device_put(self.pool, pool_spec)
+            self._fresh_lane = jax.device_put(
+                self._fresh_lane, shd.replicated(mesh, self._fresh_lane))
         self.slots: List[Optional[_Slot]] = [None] * max_slots
         self.scheduler = FCFSScheduler(token_budget)
         self.metrics = EngineMetrics()

@@ -19,6 +19,7 @@ Fault-tolerance contract:
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import statistics
 import time
@@ -96,6 +97,11 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def fit(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
+        with (self.mesh if self.mesh is not None
+              else contextlib.nullcontext()):
+            return self._fit(num_steps)
+
+    def _fit(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
         if self.state is None:
             self.init_or_restore()
         self._install_preemption_handler()

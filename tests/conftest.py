@@ -1,7 +1,29 @@
 """Shared test helpers. NOTE: no XLA_FLAGS here — smoke tests and benches
-must see 1 device; multi-device tests spawn subprocesses (test_dist.py)."""
+must see 1 device; multi-device tests spawn subprocesses (test_dist.py,
+the engine-mesh parity test) via `run_forced_devices`."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_forced_devices(code: str, devices: int = 8,
+                       timeout: int = 900) -> str:
+    """Run ``code`` in a subprocess with a forced multi-device host
+    platform. The main pytest process keeps its single-device view
+    (required by the smoke tests), so anything needing >1 device goes
+    through here."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
 
 
 def tree_maxdiff(t1, t2) -> float:

@@ -1,28 +1,14 @@
 """Distribution tests that need >1 device: spawned as subprocesses with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
 process keeps its single-device view (required by the smoke tests)."""
-import os
-import subprocess
-import sys
-
 import pytest
+
+from conftest import run_forced_devices as _run
 
 pytest.importorskip(
     "repro.dist", reason="repro.dist is not part of this build")
 
 pytestmark = pytest.mark.slow        # spawns 8-device subprocesses
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
-    return out.stdout
 
 
 def test_sharded_train_step_matches_single_device():

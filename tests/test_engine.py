@@ -191,6 +191,50 @@ def test_sampled_outputs_independent_of_co_tenants(model):
     assert outs[0] == outs[1]
 
 
+@pytest.mark.slow
+def test_engine_on_mesh_matches_single_device():
+    """Same request stream, 1-device placement vs a 4x2 ("data","model")
+    host mesh with the production sharding rules on the slot pool:
+    identical token streams. Spawned as a subprocess so the main pytest
+    process keeps its single-device view (same pattern as test_dist.py)."""
+    from conftest import run_forced_devices
+    code = """
+import jax, numpy as np
+from repro.configs.base import ModelConfig, RoutingConfig
+from repro.models.model import init_model
+from repro.serve.engine import InferenceEngine, Request
+from repro.launch.mesh import make_host_mesh
+
+CFG = ModelConfig(name="eng", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  attention="local+routing",
+                  routing=RoutingConfig(num_clusters=4, local_window=8),
+                  dtype="float32")
+params, kstate = init_model(CFG, jax.random.PRNGKey(0))
+
+def workload():
+    rng = np.random.RandomState(3)
+    return [Request(uid=i,
+                    prompt=rng.randint(0, CFG.vocab_size,
+                                       size=5 + 3 * i).tolist(),
+                    max_new_tokens=4 + (i % 5), arrival_step=i // 2)
+            for i in range(8)]
+
+eng1 = InferenceEngine(CFG, params, kstate, max_slots=4, max_len=48)
+out1 = eng1.run(workload())
+
+mesh = make_host_mesh(4, 2)
+assert dict(mesh.shape) == {"data": 4, "model": 2}, mesh.shape
+eng8 = InferenceEngine(CFG, params, kstate, max_slots=4, max_len=48,
+                       mesh=mesh)
+out8 = eng8.run(workload())
+assert out1 == out8, (out1, out8)
+assert all(s is None for s in eng8.slots)
+print("engine mesh parity OK")
+"""
+    run_forced_devices(code)
+
+
 # ---------------------------------------------------------------------------
 # Pool hygiene
 # ---------------------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""Mesh-shape factorization: oversubscribed (data, model) requests scale
+down to the largest feasible grid instead of discarding the model axis.
+Pure logic — no devices needed (make_host_mesh itself is exercised on an
+8-device platform by the engine-mesh parity test)."""
+from repro.launch.mesh import feasible_mesh_shape
+
+
+def test_request_that_fits_is_unchanged():
+    assert feasible_mesh_shape(8, 2, 4) == (2, 4)
+    assert feasible_mesh_shape(8, 1, 1) == (1, 1)
+    assert feasible_mesh_shape(16, 16, 1) == (16, 1)
+
+
+def test_oversubscribed_preserves_model_axis():
+    # the seed fell back to (n, 1) here, silently dropping TP entirely
+    assert feasible_mesh_shape(8, 4, 4) == (2, 4)
+    assert feasible_mesh_shape(8, 2, 16) == (1, 8)
+    assert feasible_mesh_shape(8, 16, 2) == (4, 2)
+
+
+def test_oversubscribed_non_divisor_request():
+    # model clamps to the largest divisor of n below the request
+    assert feasible_mesh_shape(8, 3, 5) == (2, 4)
+    assert feasible_mesh_shape(6, 4, 3) == (2, 3)
+    assert feasible_mesh_shape(6, 4, 4) == (2, 3)
+
+
+def test_single_device_degenerates_cleanly():
+    assert feasible_mesh_shape(1, 2, 4) == (1, 1)
+    assert feasible_mesh_shape(1, 1, 1) == (1, 1)

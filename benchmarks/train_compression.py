@@ -1,0 +1,138 @@
+"""Compressed (int8_ef) vs fp32 data-parallel training smoke.
+
+Trains the SAME synthetic-LM data stream twice — grad_compression="none"
+vs "int8_ef" — on a forced multi-device host platform and reports per-step
+wall time plus the relative final-loss gap (mean over the last 10 steps).
+The gap is the number that matters: error feedback is supposed to make
+int8 gradient exchange converge like fp32, and the CI `train-bench` job
+fails the push when the gap exceeds the documented threshold
+(--max-loss-gap, default 0.02 — the same 2% bar as the multi-device
+lane's test_int8_ef_train_parity_and_wire, which also asserts the s8 wire
+format; this job seeds the step-time trend line next to it).
+
+Run:  PYTHONPATH=src python benchmarks/train_compression.py
+CI:   PYTHONPATH=src python benchmarks/train_compression.py --smoke \
+          --json benchmarks/train_compression_smoke.json --max-loss-gap 0.02
+
+The device count is forced via XLA_FLAGS BEFORE jax is imported (all
+repro imports are deferred into main), so the script runs identically on
+single-CPU laptops and CI runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+DEFAULT_GAP = 0.02      # documented threshold: 2% relative final loss
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller model + fewer steps (CI regression gate)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host-platform device count (0: leave "
+                         "XLA_FLAGS alone)")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="train steps per variant (default 200, smoke 200)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
+    ap.add_argument("--max-loss-gap", type=float, default=None,
+                    help="exit nonzero if |int8_ef - fp32| / fp32 final "
+                         f"loss exceeds this (documented: {DEFAULT_GAP})")
+    args = ap.parse_args(argv)
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if args.devices and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count"
+            f"={args.devices}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import (ModelConfig, RoutingConfig, RunConfig,
+                                    TrainConfig)
+    from repro.data.synthetic import SyntheticLoader
+    from repro.train.train_step import init_train_state, make_train_step
+
+    steps = args.steps or 200
+    if args.smoke:
+        mc = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                  d_ff=128, vocab_size=64)
+    else:
+        mc = dict(num_layers=4, d_model=128, num_heads=8, num_kv_heads=4,
+                  d_ff=256, vocab_size=256)
+    cfg = ModelConfig(name="rt-train-bench", attention="local+routing",
+                      routing=RoutingConfig(num_clusters=4,
+                                            local_window=16),
+                      dtype="float32", **mc)
+
+    n_dev = len(jax.devices())
+    batch, seq = 8, 64
+
+    def run_cfg(comp):
+        return RunConfig(model=cfg, train=TrainConfig(
+            global_batch=batch, seq_len=seq, steps=steps, lr=3e-3,
+            schedule="const", warmup_steps=5, grad_compression=comp))
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.2f}M params, "
+          f"{n_dev} devices, {steps} steps x 2 variants")
+
+    def fit(comp):
+        run = run_cfg(comp)
+        ts = init_train_state(run, jax.random.PRNGKey(0),
+                              mesh=mesh if comp != "none" else None)
+        step = jax.jit(make_train_step(
+            run, mesh=mesh if comp != "none" else None),
+            donate_argnums=(0,))
+        loader = SyntheticLoader("markov", cfg.vocab_size, batch, seq)
+        losses, t_run = [], 0.0
+        for i, b in zip(range(steps), loader):
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            t0 = time.perf_counter()
+            ts, m = step(ts, b)
+            loss = float(m["loss"])        # blocks on the step
+            if i > 0:                      # exclude compile
+                t_run += time.perf_counter() - t0
+            losses.append(loss)
+        return {"final_loss": float(np.mean(losses[-10:])),
+                "first_loss": losses[0],
+                "step_time_ms": 1e3 * t_run / max(steps - 1, 1)}
+
+    fp32 = fit("none")
+    comp = fit("int8_ef")
+    gap = abs(comp["final_loss"] - fp32["final_loss"]) / fp32["final_loss"]
+
+    print("name,us_per_call,derived")
+    for name, r in (("fp32", fp32), ("int8_ef", comp)):
+        print(f"train_{name}_step,{1e3 * r['step_time_ms']:.0f},"
+              f"loss={r['first_loss']:.3f}->{r['final_loss']:.4f}")
+    print(f"compressed-vs-fp32 final-loss gap: {gap:.4%} "
+          f"(fp32 {fp32['final_loss']:.4f}, int8_ef "
+          f"{comp['final_loss']:.4f})")
+
+    if args.json:
+        record = {"smoke": args.smoke, "model": cfg.name,
+                  "params_m": cfg.param_count() / 1e6, "devices": n_dev,
+                  "steps": steps, "global_batch": batch, "seq_len": seq,
+                  "loss_gap_rel": gap, "fp32": fp32, "int8_ef": comp}
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    if args.max_loss_gap is not None:
+        if not gap <= args.max_loss_gap:   # NaN fails the gate too
+            print(f"FAIL: loss gap {gap:.4%} > allowed "
+                  f"{args.max_loss_gap:.4%}", file=sys.stderr)
+            sys.exit(1)
+        print(f"loss-gap gate passed: {gap:.4%} <= {args.max_loss_gap:.4%}")
+
+
+if __name__ == "__main__":
+    main()

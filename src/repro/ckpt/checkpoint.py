@@ -14,7 +14,10 @@ Elastic restore: arrays are stored *unsharded* (gathered); `restore` takes
 an optional sharding tree and `jax.device_put`s each leaf with the NEW
 sharding — restoring onto a different mesh shape (elastic scale-up/down)
 is just a different sharding tree. Restores also work across
-dtype-preserving param-structure-identical config tweaks.
+dtype-preserving param-structure-identical config tweaks, and across
+toggling int8_ef grad compression: missing or device-count-mismatched
+`ef_state/*` leaves re-zero instead of failing (the error-feedback
+residual is approximation state, zero is always a valid restart).
 """
 from __future__ import annotations
 
@@ -119,6 +122,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def keys(self, step: Optional[int] = None):
+        """The flattened leaf keys a checkpoint holds (from its
+        manifest) — lets callers detect the on-disk layout before
+        committing to a restore template."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["keys"]
+
     def restore(self, state_like: Any, step: Optional[int] = None,
                 shardings: Any = None):
         """Returns (state, extra). state_like provides the pytree structure
@@ -136,9 +150,18 @@ class CheckpointManager:
             shard_flat, _ = _flatten(shardings)
         leaves = []
         for key, like in flat.items():
-            if key not in data:
-                raise KeyError(f"checkpoint missing leaf {key}")
-            arr = data[key]
+            # error-feedback residuals (TrainState.ef_state, saved under a
+            # field-named dict by the Trainer) are approximation state: a
+            # warm start from a pre-compression checkpoint or an elastic
+            # mesh change (different device-axis length) re-zeros them
+            # instead of failing the restore.
+            is_ef = key.split("/", 1)[0] == "ef_state"
+            arr = data[key] if key in data else None
+            if arr is None or (is_ef and
+                               tuple(arr.shape) != tuple(like.shape)):
+                if not is_ef:
+                    raise KeyError(f"checkpoint missing leaf {key}")
+                arr = np.zeros(tuple(like.shape), np.float32)
             if tuple(arr.shape) != tuple(like.shape):
                 raise ValueError(
                     f"shape mismatch for {key}: ckpt {arr.shape} "

@@ -160,6 +160,9 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 # Training / parallelism / run
 # ---------------------------------------------------------------------------
+GRAD_COMPRESSION_MODES = ("none", "int8_ef")
+
+
 @dataclass(frozen=True)
 class TrainConfig:
     global_batch: int = 8
@@ -177,8 +180,16 @@ class TrainConfig:
     accum_dtype: str = "float32"    # grad accumulation dtype (400B: bf16)
     remat: str = "full"             # none | full | save_dots
     seed: int = 0
-    grad_compression: str = "none"  # none | int8_ef
+    grad_compression: str = "none"  # GRAD_COMPRESSION_MODES
     z_loss: float = 0.0
+
+    def __post_init__(self):
+        # fail at construction, not as a KeyError deep inside the jitted
+        # train step after minutes of compilation
+        if self.grad_compression not in GRAD_COMPRESSION_MODES:
+            raise ValueError(
+                f"grad_compression must be one of {GRAD_COMPRESSION_MODES}, "
+                f"got {self.grad_compression!r}")
 
 
 @dataclass(frozen=True)

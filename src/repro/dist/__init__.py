@@ -5,6 +5,9 @@ meshes and int8 wire compression for gradient collectives.
                partitioned (params/opt state, batches, activations,
                decode caches) — see DESIGN.md §6 for the rule table.
   compression  `int8_psum_mean`, a chunked int8-quantized allreduce that
-               keeps fp32 tensors off the interconnect.
+               keeps fp32 tensors off the interconnect, and
+               `int8_ef_psum_mean`, its error-feedback variant whose fp32
+               residual (TrainState.ef_state) makes compressed training
+               converge like fp32 (DESIGN.md §6).
 """
 from repro.dist import compression, sharding  # noqa: F401

@@ -1,8 +1,19 @@
 """Gradient wire compression: chunked int8-quantized allreduce.
 
-``int8_psum_mean(x, axis_name)`` is a drop-in for
-``jax.lax.pmean(x, axis_name)`` inside ``shard_map`` that moves int8
-payloads over the interconnect instead of fp32:
+Two entry points, both drop-ins for ``jax.lax.pmean(x, axis_name)``
+inside ``shard_map``:
+
+  ``int8_psum_mean(x, axis)``            stateless; each call eats the
+      quantization error (~1% relative, fine for one-shot reductions).
+  ``int8_ef_psum_mean(x, err, axis)``    error feedback (1-bit Adam
+      lineage, Tang et al. 2021): returns ``(mean, new_err)`` where the
+      fp32 residual carries exactly what the wire dropped, so the error
+      is re-injected next step instead of lost and the time-averaged
+      applied mean is unbiased. This is what lets int8 gradient exchange
+      converge like fp32 over a training run (DESIGN.md §6).
+
+``int8_psum_mean(x, axis_name)`` moves int8 payloads over the
+interconnect instead of fp32:
 
   1. the local tensor is flattened, padded, and split into ``axis_size``
      equal chunks; each chunk is group-quantized (symmetric int8, one
@@ -45,6 +56,36 @@ def _dequantize(q: jax.Array, scale: jax.Array, group: int) -> jax.Array:
     return (g * scale[..., None]).reshape(q.shape)
 
 
+def _pad_chunks(x: jax.Array, n: int, group: int):
+    """Flatten to fp32 and split into ``n`` equal group-aligned chunks."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % (n * group)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(n, -1), pad         # row j is bound for device j
+
+
+def _wire_mean(chunks: jax.Array, axis_name: str, group: int):
+    """Two-hop int8 mean of per-device ``chunks`` (n, c).
+
+    Returns ``(out, e1, e2)``: the rebuilt full mean (n*c,), the local
+    hop-1 quantization error (n, c) — what THIS device failed to put on
+    the wire — and the hop-2 re-quantization error (c,) of the mean
+    chunk this device owns. Callers without error feedback ignore
+    e1/e2 (dead-code-eliminated by XLA).
+    """
+    q, s = _quantize(chunks, group)
+    e1 = chunks - _dequantize(q, s, group)
+    q = jax.lax.all_to_all(q, axis_name, 0, 0)       # s8 on the wire
+    s = jax.lax.all_to_all(s, axis_name, 0, 0)
+    mean = jnp.mean(_dequantize(q, s, group), axis=0)
+    q2, s2 = _quantize(mean, group)
+    e2 = mean - _dequantize(q2, s2, group)
+    q2 = jax.lax.all_gather(q2, axis_name, axis=0, tiled=True)   # s8 again
+    s2 = jax.lax.all_gather(s2, axis_name, axis=0, tiled=True)
+    return _dequantize(q2, s2, group), e1, e2
+
+
 def int8_psum_mean(x: jax.Array, axis_name: str, *,
                    group: int = 128) -> jax.Array:
     """Mean of ``x`` over the mapped axis with int8 wire format.
@@ -57,19 +98,44 @@ def int8_psum_mean(x: jax.Array, axis_name: str, *,
     if n == 1:
         return x
     shape, dtype = x.shape, x.dtype
-    flat = x.astype(jnp.float32).reshape(-1)
-    pad = (-flat.shape[0]) % (n * group)
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-    chunks = flat.reshape(n, -1)            # row j is bound for device j
-    q, s = _quantize(chunks, group)
-    q = jax.lax.all_to_all(q, axis_name, 0, 0)       # s8 on the wire
-    s = jax.lax.all_to_all(s, axis_name, 0, 0)
-    mean = jnp.mean(_dequantize(q, s, group), axis=0)
-    q2, s2 = _quantize(mean, group)
-    q2 = jax.lax.all_gather(q2, axis_name, axis=0, tiled=True)   # s8 again
-    s2 = jax.lax.all_gather(s2, axis_name, axis=0, tiled=True)
-    out = _dequantize(q2, s2, group)
+    chunks, pad = _pad_chunks(x, n, group)
+    out, _, _ = _wire_mean(chunks, axis_name, group)
     if pad:
         out = out[:-pad]
     return out.reshape(shape).astype(dtype)
+
+
+def int8_ef_psum_mean(x: jax.Array, err: jax.Array, axis_name: str, *,
+                      group: int = 128):
+    """Error-feedback mean of ``x`` over the mapped axis, int8 wire.
+
+    Compresses ``x + err`` instead of ``x`` and returns
+    ``(mean, new_err)`` where ``new_err`` (fp32, shape of ``x``) is
+    everything this round dropped:
+
+      * the full hop-1 quantization error (this device's contribution
+        that never reached the wire — recovered next round when every
+        device re-injects its own, each worth 1/n of the mean);
+      * this device's chunk of the hop-2 (mean re-quantization) error,
+        scaled by the axis size n: it is lost from the MEAN itself, and
+        the next round's averaging divides the re-injection by n again.
+
+    Repeated application makes the time-averaged applied mean unbiased
+    — the residual stays bounded by ~one quantization step per element
+    instead of the bias accumulating
+    (tests/test_dist.py::test_error_feedback_unbiased). On a 1-device
+    axis there is no wire and no error: identity passthrough.
+    """
+    n = jax.lax.psum(1, axis_name)          # static axis size
+    if n == 1:
+        return x, err
+    shape, dtype = x.shape, x.dtype
+    comp = x.astype(jnp.float32) + err.astype(jnp.float32).reshape(shape)
+    chunks, pad = _pad_chunks(comp, n, group)
+    out, e1, e2 = _wire_mean(chunks, axis_name, group)
+    j = jax.lax.axis_index(axis_name)
+    new_err = e1.at[j].add(n * e2).reshape(-1)
+    if pad:
+        out, new_err = out[:-pad], new_err[:-pad]
+    return (out.reshape(shape).astype(dtype),
+            new_err.reshape(err.shape).astype(jnp.float32))

@@ -152,20 +152,40 @@ def kstate_sharding(mesh, kstate):
     return jax.tree.map(one, kstate)
 
 
+def ef_sharding(mesh, ef_state):
+    """Error-feedback residuals (train_step.TrainState.ef_state): leaves
+    are (D, *param_shape) — the leading per-device axis goes over the
+    data axes, and the remaining dims inherit the param name rules via
+    the path suffix (the rules index from the END of the shape, so the
+    prepended device dim is transparent to them). No fsdp on the weight
+    dims: the data axes are already spent on the device axis."""
+    def one(path, leaf):
+        # _leaf_spec returns a full-rank spec for this leaf (device dim
+        # included, always None there: the name rules index from the end)
+        spec = list(_leaf_spec(path, leaf, mesh, fsdp=False).spec)
+        if _fits(leaf.shape, 0, mesh, dp_axes(mesh)):
+            spec[0] = dp_axes(mesh)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, ef_state)
+
+
 def train_state_sharding(mesh, ts, fsdp: bool = False):
-    """Sharding tree for a TrainState (params, kstate, opt_state, step).
+    """Sharding tree for a TrainState (params, kstate, opt_state, step,
+    ef_state).
 
     ``ts`` may hold arrays or ShapeDtypeStructs (jax.eval_shape output).
     The optimizer state goes through the same name rules as the params:
     adam's m/v mirror the param layout, adafactor's factored stats and
-    both counters replicate.
+    both counters replicate. The error-feedback residual (None unless
+    grad compression is on) keeps its leading device axis over data.
     """
     from repro.train.train_step import TrainState
     return TrainState(
         params=params_sharding(mesh, ts.params, fsdp),
         kstate=kstate_sharding(mesh, ts.kstate),
         opt_state=params_sharding(mesh, ts.opt_state, fsdp),
-        step=NamedSharding(mesh, P()))
+        step=NamedSharding(mesh, P()),
+        ef_state=ef_sharding(mesh, ts.ef_state))
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +228,8 @@ def cache_sharding(mesh, cache, batch: int):
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
-def make_constrain_fn(mesh, seq_parallel: bool = False):
+def make_constrain_fn(mesh, seq_parallel: bool = False,
+                      fsdp_prefetch: bool = False):
     """Activation constraint for the residual stream, applied between
     scan groups (models/transformer.apply_stack) and at stack entry.
 
@@ -218,6 +239,15 @@ def make_constrain_fn(mesh, seq_parallel: bool = False):
     The returned function carries an ``.epilogue`` attribute (only when
     seq_parallel) that re-gathers the sequence dim before the LM head,
     keeping the vocab-parallel logits layout intact.
+
+    With ``fsdp_prefetch`` it additionally carries a ``.gather_params``
+    attribute: applied to a scan group's weight slice at group entry
+    (models/transformer.apply_stack), it constrains every fsdp-sharded
+    weight to its TP-only layout (data axes gathered). That tags the
+    zero-3 all-gather at ONE known point at the top of each group body —
+    instead of GSPMD materializing shards lazily at first use mid-group —
+    which is what lets XLA's latency-hiding scheduler hoist the gather of
+    group i+1 over the tail compute of group i.
 
     Dims that do not divide their axis stay unconstrained — GSPMD picks.
     """
@@ -239,4 +269,14 @@ def make_constrain_fn(mesh, seq_parallel: bool = False):
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, spec))
         constrain.epilogue = epilogue
+
+    if fsdp_prefetch:
+        def gather_params(p_group):
+            def one(path, leaf):
+                if getattr(leaf, "ndim", 0) < 2:
+                    return leaf
+                return jax.lax.with_sharding_constraint(
+                    leaf, _leaf_spec(path, leaf, mesh, fsdp=False))
+            return jax.tree_util.tree_map_with_path(one, p_group)
+        constrain.gather_params = gather_params
     return constrain

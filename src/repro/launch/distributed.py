@@ -1,0 +1,124 @@
+"""Multi-host launch scaffolding: `jax.distributed.initialize` wiring
+(DESIGN.md §7).
+
+One process per host; process 0 doubles as the coordination service.
+Discovery is env/flag-driven (flags override env):
+
+  REPRO_COORDINATOR    host:port of process 0's coordinator service
+  REPRO_NUM_PROCESSES  total number of launched processes
+  REPRO_PROCESS_ID     this process's rank in [0, num_processes)
+
+When nothing is configured, `initialize()` is a no-op single-process
+fallback — laptops, CI, and every test run exactly the code path a real
+fleet runs, minus the coordinator handshake. `jax.distributed.initialize`
+MUST run before anything else touches the jax backend (it registers the
+global device view), which is why `launch/train.py` calls this before its
+first `jax.devices()`.
+
+After initialization, mesh construction goes through the same
+`launch/mesh.make_host_mesh` used everywhere else: `jax.make_mesh`
+enumerates the GLOBAL device set, so the per-process code is identical on
+one host and on sixty-four.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Mapping, Optional
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+
+@dataclass(frozen=True)
+class LaunchSpec:
+    """A validated multi-process launch description."""
+    coordinator: str            # "host:port" of process 0
+    num_processes: int
+    process_id: int
+
+    def __post_init__(self):
+        if self.num_processes < 1:
+            raise ValueError(f"num_processes must be >= 1, "
+                             f"got {self.num_processes}")
+        if not 0 <= self.process_id < self.num_processes:
+            raise ValueError(f"process_id {self.process_id} outside "
+                             f"[0, {self.num_processes})")
+        if self.num_processes > 1 and ":" not in self.coordinator:
+            raise ValueError("multi-process launch needs a host:port "
+                             f"coordinator, got {self.coordinator!r}")
+
+
+def detect(env: Optional[Mapping[str, str]] = None, *,
+           coordinator: Optional[str] = None,
+           num_processes: Optional[int] = None,
+           process_id: Optional[int] = None) -> Optional[LaunchSpec]:
+    """Build a LaunchSpec from explicit flags, falling back to env vars.
+
+    Returns None when nothing is configured (the single-process
+    fallback); raises on half-configured launches so a typo'd env never
+    silently trains on 1/N of the fleet.
+    """
+    env = os.environ if env is None else env
+    coordinator = coordinator or env.get(ENV_COORDINATOR, "")
+    if num_processes is None:
+        num_processes = int(env.get(ENV_NUM_PROCESSES, "0") or 0)
+    if process_id is None:
+        # "" counts as unset: REPRO_PROCESS_ID=$RANK with $RANK unset
+        # must hit the explicit-rank error, not a bare int('') crash
+        raw = env.get(ENV_PROCESS_ID, "")
+        process_id = int(raw) if raw != "" else None
+    if not coordinator and num_processes <= 1:
+        return None
+    if not coordinator:
+        raise ValueError(f"{ENV_NUM_PROCESSES}={num_processes} but no "
+                         f"coordinator address ({ENV_COORDINATOR})")
+    if num_processes < 1:
+        raise ValueError(f"coordinator {coordinator!r} set but "
+                         f"{ENV_NUM_PROCESSES} missing")
+    if process_id is None:
+        # defaulting to rank 0 would make EVERY host claim process 0 and
+        # hang the coordinator handshake — fail fast instead
+        raise ValueError(f"multi-process launch needs an explicit rank "
+                         f"({ENV_PROCESS_ID} or --process-id)")
+    return LaunchSpec(coordinator, num_processes, process_id)
+
+
+def initialize(spec: Optional[LaunchSpec] = None,
+               env: Optional[Mapping[str, str]] = None, **detect_kw) -> bool:
+    """Initialize `jax.distributed` when a launch is configured.
+
+    Call before any other jax API. Returns True when multi-process
+    initialization ran, False on the single-process fallback (no jax
+    backend state is touched in that case).
+    """
+    if spec is None:
+        spec = detect(env, **detect_kw)
+    if spec is None or spec.num_processes <= 1:
+        return False
+    import jax
+    jax.distributed.initialize(coordinator_address=spec.coordinator,
+                               num_processes=spec.num_processes,
+                               process_id=spec.process_id)
+    return True
+
+
+def process_info() -> dict:
+    """Rank/host-count view after (maybe-)initialization, for logging."""
+    import jax
+    return {"process_index": jax.process_index(),
+            "process_count": jax.process_count(),
+            "local_devices": jax.local_device_count(),
+            "global_devices": jax.device_count()}
+
+
+def make_process_mesh(data: int = 1, model: int = 1):
+    """Mesh over the GLOBAL device view (call after `initialize`).
+
+    Delegates to `launch/mesh.make_host_mesh`, which clamps the request
+    to the largest feasible (data, model) grid — identical semantics for
+    a laptop, a CI runner, and a multi-host fleet.
+    """
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(data, model)

@@ -1,33 +1,33 @@
 """Distributed training launcher: mesh + sharding rules + Trainer.
 
-On real hardware this runs under `jax.distributed.initialize()` per host;
-here it drives any `--arch` on whatever devices exist (use
-XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise the sharded
-path on CPU).
+Multi-host: each host runs this module once; coordinator discovery is
+env/flag-driven (launch/distributed.py, DESIGN.md §7). Single-process
+runs — laptops, CI — take the same path through the no-op fallback (use
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise the
+sharded path on CPU).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --steps 100 --mesh 2x4
+
+  # int8 error-feedback gradient compression (data-parallel shard_map)
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 100 --grad-compression int8_ef
+
+  # two-host launch (per host; coordinator = host 0)
+  REPRO_COORDINATOR=host0:9876 REPRO_NUM_PROCESSES=2 REPRO_PROCESS_ID=$RANK \
+      python -m repro.launch.train --arch granite-8b --mesh 8x2
 """
 from __future__ import annotations
 
 import argparse
 import functools
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCHS, get_config, reduced_config
-from repro.configs.base import RunConfig, TrainConfig, with_overrides
-from repro.data.synthetic import SyntheticLoader
-from repro.dist import sharding as shd
-from repro.launch.mesh import make_host_mesh
-from repro.train.train_step import init_train_state, make_train_step
-from repro.train.trainer import Trainer
+from repro.launch import distributed
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b", choices=sorted(ARCHS))
+    ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
@@ -36,30 +36,72 @@ def main():
                                                "all devices as data)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--grad-compression", default="none",
+                    help="one of configs.base.GRAD_COMPRESSION_MODES; "
+                         "int8_ef: error-feedback int8 gradient exchange "
+                         "(data-parallel shard_map path); validated by "
+                         "TrainConfig after the deferred imports")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0 (or $REPRO_COORDINATOR)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total launched processes (or $REPRO_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank (or $REPRO_PROCESS_ID)")
     args = ap.parse_args()
+
+    # before ANY other jax API: registers the global device view
+    multi = distributed.initialize(coordinator=args.coordinator,
+                                   num_processes=args.num_processes,
+                                   process_id=args.process_id)
+
+    import jax
+    import jax.numpy as jnp  # noqa: F401  (kept for parity with examples)
+
+    from repro.configs import ARCHS, get_config, reduced_config
+    from repro.configs.base import RunConfig, TrainConfig, with_overrides
+    from repro.data.synthetic import SyntheticLoader
+    from repro.dist import sharding as shd
+    from repro.train.train_step import init_train_state, make_train_step
+    from repro.train.trainer import Trainer
+
+    if args.arch not in ARCHS:
+        ap.error(f"unknown --arch {args.arch}; choices: {sorted(ARCHS)}")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = with_overrides(cfg, dtype="float32")
     run = RunConfig(model=cfg, train=TrainConfig(
         global_batch=args.batch, seq_len=args.seq, steps=args.steps,
-        lr=1e-3, schedule="linear_warmup_rsqrt", warmup_steps=20))
+        lr=1e-3, schedule="linear_warmup_rsqrt", warmup_steps=20,
+        grad_compression=args.grad_compression))
 
-    n = len(jax.devices())
+    n = jax.device_count()
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
     else:
         d, m = n, 1
-    mesh = make_host_mesh(d, m)      # clamps oversubscribed requests
+    compressed = run.train.grad_compression == "int8_ef"
+    if compressed and m > 1:
+        ap.error("--grad-compression int8_ef is data-parallel only; "
+                 "use --mesh Dx1")
+    if compressed and args.seq_parallel:
+        ap.error("--seq-parallel needs the GSPMD path; drop it or use "
+                 "--grad-compression none")
+    mesh = distributed.make_process_mesh(d, m)   # clamps oversubscription
     d, m = mesh.shape["data"], mesh.shape["model"]
+    info = distributed.process_info()
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
-          f"mesh=({d}x{m}) devices={n}")
+          f"mesh=({d}x{m}) devices={n} "
+          f"process={info['process_index']}/{info['process_count']} "
+          f"multi_host={multi} compression={run.train.grad_compression}")
 
+    use_fsdp = cfg.param_count() > 20e9
     ts_shapes = jax.eval_shape(
-        functools.partial(init_train_state, run), jax.random.PRNGKey(0))
-    ts_spec = shd.train_state_sharding(mesh, ts_shapes,
-                                       fsdp=cfg.param_count() > 20e9)
-    constrain = shd.make_constrain_fn(mesh, args.seq_parallel)
-    fn = make_train_step(run, constrain_fn=constrain)
+        functools.partial(init_train_state, run, mesh=mesh),
+        jax.random.PRNGKey(0))
+    ts_spec = shd.train_state_sharding(mesh, ts_shapes, fsdp=use_fsdp)
+    constrain = (None if compressed else shd.make_constrain_fn(
+        mesh, args.seq_parallel, fsdp_prefetch=use_fsdp))
+    fn = make_train_step(run, constrain_fn=constrain, mesh=mesh)
 
     def pinned_fn(ts, batch):
         # pin the output state to the rule layout so it round-trips into
@@ -79,11 +121,9 @@ def main():
     loader = SyntheticLoader("markov", min(cfg.vocab_size, 512),
                              args.batch, args.seq)
     with mesh:
-        ts = jax.device_put(init_train_state(run, jax.random.PRNGKey(0)),
-                            ts_spec)
         tr = Trainer(run, loader, ckpt_dir=args.ckpt_dir, mesh=mesh,
                      shardings=ts_spec, step_fn=sharded_step)
-        tr.state = ts
+        tr.init_or_restore()   # fresh: sharded init; ckpt: elastic resume
         out = tr.fit(args.steps)
     hist = tr.metrics_history
     if hist:

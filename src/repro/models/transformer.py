@@ -343,6 +343,10 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_seg_kstate = []
     constrain = constrain_fn or (lambda t: t)
+    # fsdp prefetch (dist/sharding.make_constrain_fn): re-constrain the
+    # group's weight slice to its gathered (TP-only) layout at group entry,
+    # pinning the zero-3 all-gather to one schedulable point per group
+    gather = getattr(constrain, "gather_params", None)
     # constrain the embedding output too: with sequence parallelism the
     # residual stream must enter the first scan group already seq-sharded,
     # or GSPMD keeps a replicated copy alive until the first group boundary
@@ -352,6 +356,8 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
 
         def group_fn(x, xs, pattern=pattern, base=layer_counter):
             p_group, k_group, gi = xs
+            if gather is not None:
+                p_group = gather(p_group)
             aux_g = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
             new_k = {}
             for i, spec in enumerate(pattern):

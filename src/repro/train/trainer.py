@@ -62,11 +62,31 @@ class Trainer:
     # ------------------------------------------------------------------
     def init_or_restore(self) -> TrainState:
         key = jax.random.PRNGKey(self.run.train.seed)
-        state = init_train_state(self.run, key)
+        state = init_train_state(self.run, key, mesh=self.mesh)
         if self.mgr is not None and self.mgr.latest_step() is not None:
-            state, extra = self.mgr.restore(state, shardings=self.shardings)
+            # checkpoints hold the field-named dict, not the bare tuple,
+            # so leaves are keyed "params/...", "ef_state/..." on disk
+            shardings = (self.shardings._asdict()
+                         if isinstance(self.shardings, TrainState)
+                         else self.shardings)
+            if any(k.split("/", 1)[0] == "params" for k in self.mgr.keys()):
+                d, extra = self.mgr.restore(state._asdict(),
+                                            shardings=shardings)
+                state = TrainState(**d)
+            else:
+                # legacy checkpoint (bare-tuple layout, index-keyed
+                # leaves) from before the field-named format; it can
+                # never hold an ef residual, so restore the 4-field part
+                # and keep the freshly-zeroed ef_state
+                legacy, extra = self.mgr.restore(
+                    state._replace(ef_state=None), shardings=self.shardings)
+                state = legacy._replace(ef_state=state.ef_state)
             if "loader" in extra:
                 self.loader.restore(extra["loader"])
+        elif self.shardings is not None:
+            # fresh init on a mesh: commit the rule layout up front so
+            # the first step's in_shardings see it (no device-0 transient)
+            state = jax.device_put(state, self.shardings)
         self.state = state
         return state
 
@@ -82,7 +102,7 @@ class Trainer:
     def _checkpoint(self, blocking=False):
         if self.mgr is None or self.state is None:
             return
-        self.mgr.save(int(self.state.step), self.state,
+        self.mgr.save(int(self.state.step), self.state._asdict(),
                       extra={"loader": self.loader.state()},
                       blocking=blocking or not self.async_ckpt)
 

@@ -10,13 +10,18 @@ import jax.numpy as jnp
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# CI runs the multi-device lane as a matrix over device counts (2, 8);
+# tests must derive mesh shapes from len(jax.devices()), not hardcode 8
+FORCED_DEVICES = int(os.environ.get("REPRO_TEST_DEVICE_COUNT", "8"))
 
-def run_forced_devices(code: str, devices: int = 8,
+
+def run_forced_devices(code: str, devices: int = 0,
                        timeout: int = 900) -> str:
     """Run ``code`` in a subprocess with a forced multi-device host
-    platform. The main pytest process keeps its single-device view
-    (required by the smoke tests), so anything needing >1 device goes
-    through here."""
+    platform (default: the CI matrix's $REPRO_TEST_DEVICE_COUNT, else 8).
+    The main pytest process keeps its single-device view (required by
+    the smoke tests), so anything needing >1 device goes through here."""
+    devices = devices or FORCED_DEVICES
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = _SRC

@@ -135,6 +135,89 @@ def test_straggler_detection():
     assert tr.straggler_count >= 1 and flagged
 
 
+def test_ef_state_checkpoint_roundtrip(tmp_path):
+    """The error-feedback residual rides in TrainState and must survive
+    save/restore bit-exactly (it is optimizer-adjacent state: dropping it
+    re-introduces the compression bias it exists to cancel)."""
+    from repro.train.train_step import TrainState, init_train_state
+    run = RunConfig(model=CFG, train=TrainConfig(
+        global_batch=4, seq_len=32, grad_compression="int8_ef"))
+    ts = init_train_state(run, jax.random.PRNGKey(0))
+    assert ts.ef_state is not None
+    # recognizable nonzero residuals (a fresh init would also be zeros)
+    ts = ts._replace(ef_state=jax.tree.map(
+        lambda e: e + 0.25, ts.ef_state))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, ts._asdict())
+    restored, _ = mgr.restore(ts._asdict())
+    ts2 = TrainState(**restored)
+    assert tree_maxdiff(ts.ef_state, ts2.ef_state) == 0.0
+    assert tree_maxdiff(ts.params, ts2.params) == 0.0
+
+
+def test_ef_state_warm_start_from_uncompressed_ckpt(tmp_path):
+    """Turning compression ON mid-run: a checkpoint saved without
+    ef_state restores into a compression-enabled state with zero
+    residuals instead of failing (zero is always a valid EF restart)."""
+    from repro.train.train_step import TrainState, init_train_state
+    run_f = RunConfig(model=CFG, train=TrainConfig(global_batch=4,
+                                                   seq_len=32))
+    ts_f = init_train_state(run_f, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, ts_f._asdict())
+    run_c = RunConfig(model=CFG, train=TrainConfig(
+        global_batch=4, seq_len=32, grad_compression="int8_ef"))
+    ts_c = init_train_state(run_c, jax.random.PRNGKey(0))
+    restored, _ = mgr.restore(ts_c._asdict())
+    ts2 = TrainState(**restored)
+    assert tree_maxdiff(ts_f.params, ts2.params) == 0.0
+    assert all(float(jnp.abs(e).max()) == 0.0
+               for e in jax.tree.leaves(ts2.ef_state))
+
+
+@pytest.mark.slow
+def test_restart_bit_exact_compressed(tmp_path):
+    """The fault-tolerance contract holds with int8_ef compression on:
+    interrupted-and-resumed == uninterrupted, bit for bit, including the
+    error-feedback residual threading through the checkpoint."""
+    run = RunConfig(model=CFG, train=TrainConfig(
+        global_batch=4, seq_len=32, steps=9, lr=1e-3, schedule="const",
+        warmup_steps=1, grad_compression="int8_ef"))
+    t_full = Trainer(run, _loader(), ckpt_dir=str(tmp_path / "a"),
+                     ckpt_every=3)
+    t_full.fit(9)
+    t_int = Trainer(run, _loader(), ckpt_dir=str(tmp_path / "b"),
+                    ckpt_every=3)
+    t_int.fit(5)
+    t_res = Trainer(run, _loader(), ckpt_dir=str(tmp_path / "b"),
+                    ckpt_every=3)
+    t_res.fit(9)
+    assert tree_maxdiff(t_full.state.params, t_res.state.params) == 0.0
+    assert tree_maxdiff(t_full.state.ef_state, t_res.state.ef_state) == 0.0
+
+
+def test_legacy_tuple_checkpoint_restores(tmp_path):
+    """Checkpoints written before the field-named format (bare TrainState
+    tuple, index-keyed leaves) still resume via the Trainer fallback."""
+    from repro.train.train_step import init_train_state
+    ts = init_train_state(RUN, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, ts, extra={"loader": {"step": 4, "seed": 0}})  # bare tuple
+    tr = Trainer(RUN, _loader(), ckpt_dir=str(tmp_path))
+    restored = tr.init_or_restore()
+    assert tree_maxdiff(ts.params, restored.params) == 0.0
+    assert int(restored.step) == int(ts.step)
+    # a legacy checkpoint can never hold an ef residual: enabling
+    # compression on resume gets fresh zeros, not a crash
+    run_c = RunConfig(model=CFG, train=TrainConfig(
+        global_batch=4, seq_len=32, grad_compression="int8_ef"))
+    tr_c = Trainer(run_c, _loader(), ckpt_dir=str(tmp_path))
+    restored_c = tr_c.init_or_restore()
+    assert tree_maxdiff(ts.params, restored_c.params) == 0.0
+    assert all(float(jnp.abs(e).max()) == 0.0
+               for e in jax.tree.leaves(restored_c.ef_state))
+
+
 def test_elastic_restore_across_shardings(tmp_path):
     """Restore re-shards onto a different sharding (elastic mesh change).
     On 1 CPU device we exercise the device_put path with two distinct

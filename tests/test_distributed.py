@@ -1,0 +1,93 @@
+"""Multi-host launch scaffolding (launch/distributed.py): env/flag
+coordinator discovery, validation, and the single-process fallback.
+The actual jax.distributed.initialize call is monkeypatched — spinning a
+real coordinator needs multiple processes, which CI exercises only
+through the fallback path (the one laptops run too)."""
+import pytest
+
+from repro.launch import distributed as dist
+
+
+def test_detect_nothing_configured_is_single_process():
+    assert dist.detect(env={}) is None
+
+
+def test_detect_from_env():
+    spec = dist.detect(env={dist.ENV_COORDINATOR: "host0:9876",
+                            dist.ENV_NUM_PROCESSES: "4",
+                            dist.ENV_PROCESS_ID: "2"})
+    assert spec == dist.LaunchSpec("host0:9876", 4, 2)
+
+
+def test_flags_override_env():
+    spec = dist.detect(env={dist.ENV_COORDINATOR: "stale:1",
+                            dist.ENV_NUM_PROCESSES: "2",
+                            dist.ENV_PROCESS_ID: "1"},
+                       coordinator="fresh:2", num_processes=8,
+                       process_id=7)
+    assert spec == dist.LaunchSpec("fresh:2", 8, 7)
+
+
+def test_missing_rank_raises():
+    # defaulting a missing rank to 0 would make EVERY host claim
+    # process 0 and hang the coordinator handshake
+    with pytest.raises(ValueError, match="explicit rank"):
+        dist.detect(env={dist.ENV_COORDINATOR: "host0:9876",
+                         dist.ENV_NUM_PROCESSES: "2"})
+    # REPRO_PROCESS_ID=$RANK with $RANK unset exports "": same error,
+    # not a bare int('') crash
+    with pytest.raises(ValueError, match="explicit rank"):
+        dist.detect(env={dist.ENV_COORDINATOR: "host0:9876",
+                         dist.ENV_NUM_PROCESSES: "2",
+                         dist.ENV_PROCESS_ID: ""})
+
+
+def test_half_configured_launch_raises():
+    # NUM_PROCESSES without a coordinator: a typo'd env must never
+    # silently train on 1/N of the fleet
+    with pytest.raises(ValueError, match="coordinator"):
+        dist.detect(env={dist.ENV_NUM_PROCESSES: "4"})
+    with pytest.raises(ValueError):
+        dist.detect(env={dist.ENV_COORDINATOR: "host0:9876"})
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="process_id"):
+        dist.LaunchSpec("host0:9876", 4, 4)
+    with pytest.raises(ValueError, match="host:port"):
+        dist.LaunchSpec("no-port", 4, 0)
+    # single process needs no coordinator
+    assert dist.LaunchSpec("", 1, 0).num_processes == 1
+
+
+def test_initialize_single_process_fallback():
+    assert dist.initialize(env={}) is False
+
+
+def test_initialize_calls_jax_distributed(monkeypatch):
+    import jax
+    calls = {}
+
+    def fake_init(coordinator_address, num_processes, process_id):
+        calls.update(addr=coordinator_address, n=num_processes,
+                     pid=process_id)
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_init)
+    ran = dist.initialize(env={dist.ENV_COORDINATOR: "host0:9876",
+                               dist.ENV_NUM_PROCESSES: "2",
+                               dist.ENV_PROCESS_ID: "1"})
+    assert ran is True
+    assert calls == {"addr": "host0:9876", "n": 2, "pid": 1}
+
+
+def test_process_info_single_process():
+    info = dist.process_info()
+    assert info["process_index"] == 0
+    assert info["process_count"] == 1
+    assert info["global_devices"] >= 1
+
+
+def test_make_process_mesh_clamps():
+    mesh = dist.make_process_mesh(64, 64)   # wildly oversubscribed
+    assert mesh.shape["data"] * mesh.shape["model"] >= 1
+    assert set(mesh.axis_names) == {"data", "model"}

@@ -1,0 +1,97 @@
+"""--backend-sweep: one row per registered attention backend.
+
+Emits rows in the report-table CSV schema (``name,us_per_call,derived``)
+where ``derived`` carries ``tok_s`` (tokens/s of the jitted attend call
+at the sweep shape) and ``peak_mb`` (XLA ``memory_analysis`` temp+output
+bytes of the compiled call), so a backend regression shows up in the
+perf trajectory next to the paper tables. Pallas backends run in
+interpret mode on CPU — their wall-clock is NOT a kernel projection
+(the roofline table owns TPU numbers); the row exists so the kernel
+path's memory shape and correctness-under-jit are tracked per push.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import attn as A
+from repro.configs.base import RoutingConfig
+from repro.core.kmeans import init_kmeans
+
+Row = Tuple[str, float, str]
+
+# Sweep shape: satisfies every kernel block constraint (N % 128 == 0,
+# cluster window N/kc = 128) while staying CPU-interpretable.
+B, H, HKV, N, DH = 2, 4, 2, 512, 64
+ROUTING = RoutingConfig(num_clusters=4)
+
+
+def _spec(variant: str) -> A.AttentionSpec:
+    kw = dict(num_heads=H, num_kv_heads=HKV, head_dim=DH,
+              rope_theta=10000.0)
+    if variant == "full":
+        return A.AttentionSpec(variant="full", **kw)
+    if variant == "local":
+        return A.AttentionSpec(variant="local", window=128, **kw)
+    if variant == "routing":
+        return A.AttentionSpec(variant="routing", routing=ROUTING, **kw)
+    return A.AttentionSpec(variant="local+routing", routing=ROUTING,
+                           window=128, routing_heads=2, **kw)
+
+
+def _peak_bytes(compiled) -> int:
+    try:
+        m = compiled.memory_analysis()
+        return int(m.temp_size_in_bytes + m.output_size_in_bytes)
+    except Exception:                      # backend without the analysis
+        return 0
+
+
+def backend_sweep_rows(iters: int = 3) -> List[Row]:
+    rows: List[Row] = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, H, N, DH))
+    k = jax.random.normal(ks[1], (B, HKV, N, DH))
+    v = jax.random.normal(ks[2], (B, HKV, N, DH))
+    for backend in sorted(A.registered(), key=lambda b: b.name):
+        spec = _spec(backend.variant)
+        Hr = spec.routing_heads or H
+        mu = (init_kmeans(ks[3], Hr, ROUTING.num_clusters, DH).mu
+              if spec.routing is not None else jnp.zeros((0,)))
+
+        def fn(q, k, v, mu, backend=backend, spec=spec):
+            return A.attend(spec, q, k, v,
+                            state=mu if spec.routing is not None else None,
+                            update_state=False, impl=backend.impl).out
+
+        jfn = jax.jit(fn)
+        peak = _peak_bytes(jfn.lower(q, k, v, mu).compile())
+        out = jfn(q, k, v, mu)
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(q, k, v, mu))
+            ts.append(time.perf_counter() - t0)
+        us = float(np.median(ts) * 1e6)
+        tok_s = B * N / (us / 1e6)
+        caps = backend.caps
+        flags = "+".join(
+            f for f, on in [("decode", caps.supports_decode),
+                            ("mesh", caps.supports_mesh),
+                            ("pad", caps.supports_pad_mask),
+                            ("tpu", caps.needs_tpu)] if on)
+        rows.append((f"backends/{backend.variant}:{backend.impl}", us,
+                     f"tok_s={tok_s:.0f};peak_mb={peak/2**20:.1f};"
+                     f"cache={caps.cache_layout or '-'};caps={flags}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in backend_sweep_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -5,15 +5,29 @@ Prints ``name,us_per_call,derived`` CSV (one row per measured entity).
 carries the table's quantity (paper reference value, measured ratio, JSD,
 bits/dim, ...). TPU-projected numbers live in the roofline table
 (EXPERIMENTS.md §Roofline), not here.
+
+``--backend-sweep`` appends one row per registered attention backend
+(repro.attn registry) with tok/s + peak-memory, so backend regressions
+show up in the same report tables; ``--backend-sweep-only`` skips the
+paper tables (fast per-push trend line).
 """
 import sys
 
 
-def main() -> None:
-    from benchmarks.tables import ALL_TABLES
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    sweep = "--backend-sweep" in argv or "--backend-sweep-only" in argv
+    tables = "--backend-sweep-only" not in argv
     print("name,us_per_call,derived")
-    for table in ALL_TABLES:
-        for name, us, derived in table():
+    if tables:
+        from benchmarks.tables import ALL_TABLES
+        for table in ALL_TABLES:
+            for name, us, derived in table():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+    if sweep:
+        from benchmarks.backend_sweep import backend_sweep_rows
+        for name, us, derived in backend_sweep_rows():
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
 

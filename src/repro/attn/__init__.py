@@ -1,0 +1,107 @@
+"""repro.attn — the unified attention-backend API.
+
+One entry point for every attention site in the system::
+
+    from repro import attn
+    spec = attn.spec_for_layer(cfg, "local+routing")
+    out = attn.attend(spec, q, k, v, state=kmu, positions=pos,
+                      pad_mask=pm)                    # train / prefill
+    out = attn.attend(spec, q, k, v, state=kmu, cache=cache,
+                      pos=pos)                        # decode, one token
+
+``attend`` resolves the best registered backend for the current platform
+(Pallas kernels on TPU, chunked/online-softmax references elsewhere);
+``impl=`` forces a specific backend and raises a loud
+``BackendResolutionError`` when its declared capabilities don't cover
+the call. The registry (``repro.attn.registry``) is where new variants
+and backends plug in; every registered backend must pass the parity
+matrix in tests/test_attn_registry.py. See DESIGN.md §8.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+from repro.attn import backends as _backends           # noqa: F401 (registers)
+from repro.attn import registry
+from repro.attn.registry import (Backend, BackendResolutionError,  # noqa
+                                 Capabilities, backends_for,
+                                 cache_fill_values, cache_sharding_hints,
+                                 get, registered, resolve, unregister)
+from repro.attn.spec import (AttentionSpec, head_split,  # noqa: F401
+                             resolve_chunk, seq_shardable, spec_for_layer,
+                             specs_for_model, variant_for_layer)
+
+
+class AttnOutput(NamedTuple):
+    out: jax.Array                  # (B, H, N, dh)
+    state: Optional[jax.Array]      # updated centroids (routing variants)
+    cache: Optional[dict] = None    # updated decode cache (decode calls)
+
+
+def _platform(platform: Optional[str]) -> str:
+    return platform or jax.default_backend()
+
+
+def attend(spec: AttentionSpec, q, k, v, *, state=None, positions=None,
+           pad_mask=None, update_state: bool = True, cache=None, pos=None,
+           mesh=None, impl: Optional[str] = None,
+           platform: Optional[str] = None) -> AttnOutput:
+    """Run the attention ``spec`` describes on q/k/v (un-roped, GQA head
+    counts), through the best registered backend.
+
+    Train/prefill mode (``cache=None``): returns (out, new_state).
+    Decode mode (``cache`` given): q/k/v are one token (N=1), ``pos``
+    (B,) is its position; returns the updated cache. ``state`` carries
+    the layer's k-means centroids for routing variants in both modes.
+    """
+    plat = _platform(platform)
+    interpret = plat != "tpu"
+    if cache is not None:
+        if pad_mask is not None:
+            # decode validity lives in the cache (ring positions, page
+            # lengths); accepting a pad_mask here and ignoring it would be
+            # exactly the silent-wrong-math failure the registry exists
+            # to kill
+            raise ValueError("attend(cache=...) is single-token decode; "
+                             "pad_mask is not meaningful there (validity "
+                             "is tracked inside the cache)")
+        backend = resolve(spec, decode=True, mesh=mesh, impl=impl,
+                          platform=plat)
+        out, new_cache = backend.decode(spec, q, k, v, cache=cache, pos=pos,
+                                        state=state, interpret=interpret)
+        return AttnOutput(out=out, state=state, cache=new_cache)
+    backend = resolve(spec, padded=pad_mask is not None,
+                      positioned=positions is not None,
+                      seq_len=q.shape[2], mesh=mesh, impl=impl,
+                      platform=plat)
+    out, new_state = backend.apply(spec, q, k, v, state=state,
+                                   positions=positions, pad_mask=pad_mask,
+                                   update_state=update_state,
+                                   interpret=interpret)
+    return AttnOutput(out=out, state=new_state)
+
+
+def decode_backend(spec: AttentionSpec, *, mesh=None,
+                   impl: Optional[str] = None,
+                   platform: Optional[str] = None) -> Backend:
+    """The backend decode calls for ``spec`` will resolve to (the serve
+    engine uses this to build cache layouts and for observability)."""
+    return resolve(spec, decode=True, mesh=mesh, impl=impl,
+                   platform=_platform(platform))
+
+
+def init_decode_cache(spec: AttentionSpec, B: int, max_len: int, dtype, *,
+                      mesh=None, impl: Optional[str] = None):
+    """The cache-leaf dict declared by the resolved decode backend."""
+    return decode_backend(spec, mesh=mesh, impl=impl).init_cache(
+        spec, B, max_len, dtype)
+
+
+def prefill_cache(spec: AttentionSpec, cache, q, k, v, *, positions,
+                  state=None, mesh=None, impl: Optional[str] = None):
+    """Fill the decode cache from prefix q/k/v, per the resolved decode
+    backend's layout."""
+    return decode_backend(spec, mesh=mesh, impl=impl).prefill_fill(
+        spec, cache, q, k, v, positions=positions, state=state)

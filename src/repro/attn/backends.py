@@ -1,0 +1,448 @@
+"""The built-in attention backends: XLA references + Pallas kernels.
+
+Registered pairs (variant, impl):
+
+  full/xla           dense or online-softmax chunked reference
+                     (core.attention), append-cache decode
+  full/pallas        flash-attention kernel (kernels.flash_attention)
+  local/xla          blocked sliding-window reference (core.local),
+                     ring-cache decode
+  local/pallas       blocked local kernel (kernels.local_attention)
+  routing/xla        Algorithm-1 reference (core.routing),
+                     cluster-paged decode
+  routing/pallas     gathered-block attention on the Pallas kernel
+                     (core.routing impl="pallas")
+  local+routing/xla      paper head split, both halves reference
+  local+routing/pallas   local half reference, routing blocks on Pallas
+
+Rope is applied *here*, per variant: full/local heads are roped, routing
+heads are not (their routing vectors and shared-QK attention keys are
+content, and the paper's causal mask runs on original positions), and
+the local+routing split ropes only its local half. Callers hand in raw
+(un-roped) q/k/v plus positions.
+
+Every backend with a decode path also owns its cache layout: the leaf
+dict ``init_cache`` builds, how prefill fills it, which leaf axes carry
+heads (sharding hints), and per-leaf reset fill values. The slot-pooled
+serving engine consumes all four through the registry.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.attn import registry
+from repro.attn.registry import Backend, Capabilities
+from repro.attn.spec import AttentionSpec, head_split, resolve_chunk
+from repro.core.attention import full_attention
+from repro.core.kmeans import KMeansState, normalize_routing
+from repro.core.local import local_attention
+from repro.core.routing import routed_attention
+from repro.models import layers as L
+
+_BIG_NEG = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Shared glue
+# ---------------------------------------------------------------------------
+def _rope_qk(spec: AttentionSpec, q, k, positions):
+    """Rope q (and k when given) at ``positions`` (default arange)."""
+    if spec.rope_theta is None:
+        return q, k
+    B, _, N, _ = q.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    q = L.apply_rope(q, positions, spec.rope_theta)
+    if k is not None:
+        k = L.apply_rope(k, positions, spec.rope_theta)
+    return q, k
+
+
+def _expand_kv(x: jax.Array, reps: int) -> jax.Array:
+    return jnp.repeat(x, reps, axis=1) if reps > 1 else x
+
+
+def _split_heads(spec: AttentionSpec, q, k, v):
+    """Slice q/k/v into the (local, routing) halves of a local+routing
+    split, mirroring the paper's layout: local heads first."""
+    Hl, Hr, kvl, kvr = head_split(spec)
+    if spec.num_kv_heads == 1:
+        kl = kr = k
+        vl = vr = v
+    else:
+        kl, kr = (None, None) if k is None else (k[:, :kvl], k[:, kvl:])
+        vl, vr = v[:, :kvl], v[:, kvl:]
+    return (q[:, :Hl], kl, vl), (q[:, Hl:], kr, vr)
+
+
+def _local_subspec(spec: AttentionSpec) -> AttentionSpec:
+    Hl, _, kvl, _ = head_split(spec)
+    return replace(spec, variant="local", num_heads=Hl, num_kv_heads=kvl,
+                   routing=None, routing_heads=0)
+
+
+def _routing_subspec(spec: AttentionSpec) -> AttentionSpec:
+    _, Hr, _, kvr = head_split(spec)
+    return replace(spec, variant="routing", num_heads=Hr, num_kv_heads=kvr,
+                   window=0, routing_heads=0)
+
+
+# ---------------------------------------------------------------------------
+# Apply (train / prefill) paths
+# ---------------------------------------------------------------------------
+def _full_xla_apply(spec, q, k, v, *, state=None, positions=None,
+                    pad_mask=None, update_state=True, interpret=True):
+    qr, kr = _rope_qk(spec, q, k, positions)
+    o = full_attention(qr, kr, v, spec.causal, pad_mask,
+                       positions=positions,
+                       chunk=resolve_chunk(spec, q.shape[2]),
+                       logit_scale=spec.logit_scale)
+    return o, state
+
+
+def _block_size(n: int, pref: int = 128) -> int:
+    """Largest kernel block <= pref that divides n (fall back to n)."""
+    for b in (pref, pref // 2, pref // 4):
+        if b and n % b == 0:
+            return b
+    return n
+
+
+def _full_pallas_apply(spec, q, k, v, *, state=None, positions=None,
+                       pad_mask=None, update_state=True, interpret=True):
+    from repro.kernels import ops as kops
+    qr, kr = _rope_qk(spec, q, k, positions)
+    o = kops.flash_attention(qr, kr, v, causal=spec.causal,
+                             bq=_block_size(q.shape[2]),
+                             bk=_block_size(k.shape[2]),
+                             interpret=interpret)
+    return o, state
+
+
+def _local_xla_apply(spec, q, k, v, *, state=None, positions=None,
+                     pad_mask=None, update_state=True, interpret=True):
+    qr, kr = _rope_qk(spec, q, k, positions)
+    o = local_attention(qr, kr, v, spec.window, spec.causal, pad_mask)
+    return o, state
+
+
+def _local_pallas_apply(spec, q, k, v, *, state=None, positions=None,
+                        pad_mask=None, update_state=True, interpret=True):
+    from repro.kernels import ops as kops
+    qr, kr = _rope_qk(spec, q, k, positions)
+    o = kops.local_attention(qr, kr, v, window=min(spec.window, q.shape[2]),
+                             causal=spec.causal, interpret=interpret)
+    return o, state
+
+
+def _make_routing_apply(kernel_impl: str):
+    def apply(spec, q, k, v, *, state=None, positions=None, pad_mask=None,
+              update_state=True, interpret=True):
+        rc = spec.routing
+        g = spec.q_per_kv
+        v_e = _expand_kv(v, g)
+        k_in = (None if (rc.share_qk and spec.causal) or k is None
+                else _expand_kv(k, g))
+        ro = routed_attention(q, k_in, v_e, KMeansState(mu=state), rc,
+                              positions, pad_mask, update_state,
+                              impl=kernel_impl, interpret=interpret)
+        return ro.out, ro.state.mu
+    return apply
+
+
+def _make_mixed_apply(kernel_impl: str):
+    routing_apply = _make_routing_apply(kernel_impl)
+
+    def apply(spec, q, k, v, *, state=None, positions=None, pad_mask=None,
+              update_state=True, interpret=True):
+        (ql, kl, vl), (qr, kr, vr) = _split_heads(spec, q, k, v)
+        o_l, _ = _local_xla_apply(
+            _local_subspec(spec), ql, kl, vl, positions=positions,
+            pad_mask=pad_mask, interpret=interpret)
+        o_r, new_mu = routing_apply(
+            _routing_subspec(spec), qr, kr, vr, state=state,
+            positions=positions, pad_mask=pad_mask,
+            update_state=update_state, interpret=interpret)
+        return jnp.concatenate([o_l, o_r], axis=1), new_mu
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# Decode paths + cache layouts
+# ---------------------------------------------------------------------------
+def _append_cache(spec, B, max_len, dtype):
+    dh, Hkv = spec.head_dim, spec.num_kv_heads
+    return {"k": jnp.zeros((B, Hkv, max_len, dh), dtype),
+            "v": jnp.zeros((B, Hkv, max_len, dh), dtype)}
+
+
+def _ring_cache(spec, B, max_len, dtype):
+    dh = spec.head_dim
+    kvl = (head_split(spec)[2] if spec.variant == "local+routing"
+           else spec.num_kv_heads)
+    W = spec.window
+    return {"lk": jnp.zeros((B, kvl, 2 * W, dh), dtype),
+            "lv": jnp.zeros((B, kvl, 2 * W, dh), dtype),
+            "lpos": jnp.full((B, 2 * W), -1, jnp.int32)}
+
+
+def _page_dims(spec, max_len):
+    kc = spec.routing.num_clusters
+    cap = spec.routing.window or max(1, max_len // kc)
+    return kc, cap
+
+
+def _pages_cache(spec, B, max_len, dtype):
+    dh = spec.head_dim
+    Hr = (head_split(spec)[1] if spec.variant == "local+routing"
+          else spec.num_heads)
+    kc, cap = _page_dims(spec, max_len)
+    return {"rk": jnp.zeros((B, Hr, kc, cap, dh), dtype),
+            "rv": jnp.zeros((B, Hr, kc, cap, dh), dtype),
+            "rlen": jnp.zeros((B, Hr, kc), jnp.int32)}
+
+
+def _mixed_cache(spec, B, max_len, dtype):
+    return {**_ring_cache(spec, B, max_len, dtype),
+            **_pages_cache(spec, B, max_len, dtype)}
+
+
+def _full_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
+    """Append k/v at ``pos`` and attend the whole cache, causal on
+    original positions (the N=1-query-vs-long-cache path)."""
+    qr, kr = _rope_qk(spec, q, k, pos[:, None])
+    B, Hkv = kr.shape[0], kr.shape[1]
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hkv)[None, :]
+    ck = cache["k"].at[bi, hi, pos[:, None]].set(
+        kr[:, :, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bi, hi, pos[:, None]].set(
+        v[:, :, 0].astype(cache["v"].dtype))
+    o = full_attention(qr, ck, cv, causal=True, positions=pos[:, None],
+                       logit_scale=spec.logit_scale)
+    return o, {**cache, "k": ck, "v": cv}
+
+
+def _local_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
+    """Blocked-local decode over the 2W ring: attend keys whose stored
+    absolute position lies in blocks b-1, b of the query position."""
+    qr, kr = _rope_qk(spec, q, k, pos[:, None])
+    window = spec.window
+    B, Hkv = kr.shape[0], kr.shape[1]
+    S2 = cache["lk"].shape[2]
+    slot = pos % S2
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hkv)[None, :]
+    ck = cache["lk"].at[bi, hi, slot[:, None]].set(
+        kr[:, :, 0].astype(cache["lk"].dtype))
+    cv = cache["lv"].at[bi, hi, slot[:, None]].set(
+        v[:, :, 0].astype(cache["lv"].dtype))
+    cp = cache["lpos"].at[jnp.arange(B), slot].set(pos)
+    lo = (pos // window - 1) * window      # start of block b-1
+    valid = (cp >= jnp.maximum(lo, 0)[:, None]) & (cp >= 0) & \
+            (cp <= pos[:, None])
+    o = full_attention(qr, ck, cv, causal=False, pad_mask=valid,
+                       logit_scale=spec.logit_scale)
+    return o, {**cache, "lk": ck, "lv": cv, "lpos": cp}
+
+
+def _routing_decode(spec, q, k, v, *, cache, pos, state=None,
+                    interpret=True):
+    """Cluster-paged routing decode: the token routes to its argmax
+    centroid and attends only that page (+ itself). ``state`` is the
+    layer's centroid tree mu (Hr, kc, dh); q/v arrive un-roped with Hkv
+    heads and are expanded to the routing head count here."""
+    mu = state
+    v = _expand_kv(v, spec.q_per_kv)
+    B, Hr, _, dh = q.shape
+    kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
+    r = normalize_routing(q)[:, :, 0]      # (B,Hr,dh)
+    scores = jnp.einsum("bhd,hkd->bhk", r.astype(jnp.float32),
+                        mu.astype(jnp.float32))
+    c = jnp.argmax(scores, axis=-1)        # (B,Hr)
+    sel = c[:, :, None, None, None]
+    page_k = jnp.take_along_axis(cache["rk"], sel, axis=2)[:, :, 0]
+    page_v = jnp.take_along_axis(cache["rv"], sel, axis=2)[:, :, 0]
+    plen = jnp.take_along_axis(cache["rlen"], c[:, :, None], axis=2)[..., 0]
+    nvalid = jnp.minimum(plen, cap)        # (B,Hr)
+    logits = jnp.einsum("bhd,bhcd->bhc", r, page_k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(dh)
+    slot_ok = jnp.arange(cap)[None, None, :] < nvalid[..., None]
+    logits = jnp.where(slot_ok, logits, _BIG_NEG)
+    self_logit = (jnp.einsum("bhd,bhd->bh", r, r) /
+                  jnp.sqrt(dh)).astype(jnp.float32)
+    all_logits = jnp.concatenate([logits, self_logit[..., None]], -1)
+    attn = jax.nn.softmax(all_logits, axis=-1)
+    vals = jnp.concatenate([page_v, v[:, :, 0][:, :, None, :]], 2)
+    o = jnp.einsum("bhc,bhcd->bhd", attn.astype(vals.dtype), vals)
+    # write r, v into the ring slot of page c
+    wslot = plen % cap
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hr)[None, :]
+    ck = cache["rk"].at[bi, hi, c, wslot].set(r.astype(cache["rk"].dtype))
+    cv = cache["rv"].at[bi, hi, c, wslot].set(
+        v[:, :, 0].astype(cache["rv"].dtype))
+    cl = cache["rlen"].at[bi, hi, c].set(plen + 1)
+    return o[:, :, None, :], {**cache, "rk": ck, "rv": cv, "rlen": cl}
+
+
+def _mixed_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
+    (ql, kl, vl), (qr, _, vr) = _split_heads(spec, q, k, v)
+    ring = {n: cache[n] for n in ("lk", "lv", "lpos")}
+    o_l, ring = _local_decode(_local_subspec(spec), ql, kl, vl,
+                              cache=ring, pos=pos, interpret=interpret)
+    pages = {n: cache[n] for n in ("rk", "rv", "rlen")}
+    o_r, pages = _routing_decode(_routing_subspec(spec), qr, None, vr,
+                                 cache=pages, pos=pos, state=state,
+                                 interpret=interpret)
+    return jnp.concatenate([o_l, o_r], axis=1), {**ring, **pages}
+
+
+# ---------------------------------------------------------------------------
+# Prefill cache fill
+# ---------------------------------------------------------------------------
+def _append_fill(spec, cache, q, k, v, *, positions, state=None):
+    _, kr = _rope_qk(spec, q, k, positions)
+    out = dict(cache)
+    out["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], kr.astype(cache["k"].dtype), (0, 0, 0, 0))
+    out["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    return out
+
+
+def _ring_fill(spec, cache, q, k, v, *, positions, state=None):
+    """Place token t at ring slot t % 2W; keep the last 2W tokens."""
+    B, N = positions.shape
+    _, kr = _rope_qk(spec, q, k, positions)
+    S2 = cache["lk"].shape[2]
+    take = min(N, S2)
+    tail_k = kr[:, :, -take:]
+    tail_v = v[:, :, -take:]
+    tail_pos = positions[:, -take:]
+    slots = tail_pos % S2                                  # (B,take)
+    bi = jnp.arange(B)[:, None, None]
+    hi = jnp.arange(tail_k.shape[1])[None, :, None]
+    si = slots[:, None, :]
+    out = dict(cache)
+    out["lk"] = cache["lk"].at[bi, hi, si].set(
+        tail_k.astype(cache["lk"].dtype))
+    out["lv"] = cache["lv"].at[bi, hi, si].set(
+        tail_v.astype(cache["lv"].dtype))
+    out["lpos"] = cache["lpos"].at[jnp.arange(B)[:, None], slots].set(
+        tail_pos)
+    return out
+
+
+def _pages_fill(spec, cache, q, k, v, *, positions, state=None):
+    """Route every prefix token to its argmax page, keeping the most
+    recent ``cap`` per page at the ring slots sequential decode would
+    have used (ring continuity)."""
+    B = q.shape[0]
+    vr = _expand_kv(v, spec.q_per_kv)
+    r = normalize_routing(q)                               # (B,Hr,N,dh)
+    kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
+    Hr = r.shape[1]
+    scores = jnp.einsum("bhnd,hkd->bhnk", r.astype(jnp.float32),
+                        state.astype(jnp.float32))
+    assign = jnp.argmax(scores, -1)                        # (B,Hr,N)
+    memb = jax.nn.one_hot(assign, kc, dtype=jnp.int32)     # (B,Hr,N,kc)
+    rank_from_end = jnp.cumsum(memb[:, :, ::-1], axis=2)[:, :, ::-1]
+    rank_from_end = (rank_from_end * memb).max(-1)         # (B,Hr,N) 1-based
+    keep = (rank_from_end >= 1) & (rank_from_end <= cap)
+    counts = memb.sum(2)                                   # (B,Hr,kc)
+    write_slot = jnp.where(
+        keep,
+        (jnp.take_along_axis(counts, assign, axis=2) % cap
+         - rank_from_end) % cap,
+        cap)                                               # cap = trash
+    bi = jnp.arange(B)[:, None, None]
+    hi = jnp.arange(Hr)[None, :, None]
+    rk_pad = jnp.concatenate(
+        [cache["rk"], jnp.zeros_like(cache["rk"][:, :, :, :1])], 3)
+    rv_pad = jnp.concatenate(
+        [cache["rv"], jnp.zeros_like(cache["rv"][:, :, :, :1])], 3)
+    rk_pad = rk_pad.at[bi, hi, assign, write_slot].set(
+        r.astype(rk_pad.dtype))
+    rv_pad = rv_pad.at[bi, hi, assign, write_slot].set(
+        vr.astype(rv_pad.dtype))
+    out = dict(cache)
+    out["rk"] = rk_pad[:, :, :, :cap]
+    out["rv"] = rv_pad[:, :, :, :cap]
+    out["rlen"] = counts
+    return out
+
+
+def _mixed_fill(spec, cache, q, k, v, *, positions, state=None):
+    (ql, kl, vl), (qr, _, vr) = _split_heads(spec, q, k, v)
+    out = _ring_fill(_local_subspec(spec), cache, ql, kl, vl,
+                     positions=positions)
+    out = _pages_fill(_routing_subspec(spec), out, qr, None, vr,
+                      positions=positions, state=state)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registration
+# ---------------------------------------------------------------------------
+_RING_FILLS = {"lpos": -1}
+_RING_AXES = {"lk": 2, "lv": 2}
+_PAGE_AXES = {"rk": 2, "rv": 2, "rlen": 2}
+
+registry.register(Backend(
+    variant="full", impl="xla", apply=_full_xla_apply,
+    decode=_full_decode, init_cache=_append_cache,
+    prefill_fill=_append_fill,
+    cache_head_axes={"k": 2, "v": 2},
+    caps=Capabilities(supports_decode=True, supports_mesh=True,
+                      supports_pad_mask=True, supports_logit_scale=True,
+                      cache_layout="append")))
+
+# supports_positions=False: the flash kernel masks causality by row
+# index — the positions-aware reference must serve packed/offset calls
+registry.register(Backend(
+    variant="full", impl="pallas", apply=_full_pallas_apply, priority=10,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=False, supports_positions=False,
+                      needs_tpu=True)))
+
+registry.register(Backend(
+    variant="local", impl="xla", apply=_local_xla_apply,
+    decode=_local_decode, init_cache=_ring_cache, prefill_fill=_ring_fill,
+    cache_head_axes=_RING_AXES, cache_fill=_RING_FILLS,
+    caps=Capabilities(supports_decode=True, supports_mesh=True,
+                      supports_pad_mask=True, cache_layout="ring")))
+
+registry.register(Backend(
+    variant="local", impl="pallas", apply=_local_pallas_apply, priority=10,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=False, needs_tpu=True)))
+
+registry.register(Backend(
+    variant="routing", impl="xla", apply=_make_routing_apply("xla"),
+    decode=_routing_decode, init_cache=_pages_cache,
+    prefill_fill=_pages_fill, cache_head_axes=_PAGE_AXES,
+    caps=Capabilities(supports_decode=True, supports_mesh=True,
+                      supports_pad_mask=True, cache_layout="pages")))
+
+registry.register(Backend(
+    variant="routing", impl="pallas", apply=_make_routing_apply("pallas"),
+    priority=10,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, needs_tpu=True)))
+
+registry.register(Backend(
+    variant="local+routing", impl="xla", apply=_make_mixed_apply("xla"),
+    decode=_mixed_decode, init_cache=_mixed_cache, prefill_fill=_mixed_fill,
+    cache_head_axes={**_RING_AXES, **_PAGE_AXES}, cache_fill=_RING_FILLS,
+    caps=Capabilities(supports_decode=True, supports_mesh=True,
+                      supports_pad_mask=True, cache_layout="ring+pages")))
+
+registry.register(Backend(
+    variant="local+routing", impl="pallas",
+    apply=_make_mixed_apply("pallas"), priority=10,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, needs_tpu=True)))

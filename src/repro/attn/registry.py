@@ -1,0 +1,229 @@
+"""Attention backend registry: (variant, impl) -> Backend + capabilities.
+
+A ``Backend`` bundles everything one implementation of one variant can
+do: the train/prefill ``apply`` math, optionally a single-token
+``decode`` against the cache layout it declares (``init_cache`` /
+``prefill_fill`` own that layout), sharding hints for the layout's head
+axes, and a ``Capabilities`` record the resolver filters on.
+
+Resolution order (``resolve``): among the backends registered for the
+spec's variant, drop those whose capabilities don't cover the call
+(decode needed, pad_mask present, mesh > 1 device, sequence too long,
+TPU-only backend off-TPU), then take the highest ``priority``. Pallas
+kernels register with priority 10 and ``needs_tpu=True``: auto-selection
+prefers them on TPU and never picks them elsewhere, while an explicit
+``impl="pallas"`` still runs anywhere via interpret mode (that is what
+the CPU kernel-parity CI lane exercises). Every *other* capability
+mismatch on an explicit ``impl=`` override is a loud
+``BackendResolutionError`` — a forced backend silently computing the
+wrong thing (ignoring padding, lacking a decode path) is the failure
+mode this registry exists to kill.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.attn.spec import AttentionSpec
+
+
+class BackendResolutionError(ValueError):
+    """No registered backend satisfies the call (or a forced one can't)."""
+
+
+@dataclass(frozen=True)
+class Capabilities:
+    """What a backend can serve. ``needs_tpu`` gates auto-selection only;
+    every other flag is enforced for forced ``impl=`` overrides too.
+
+    ``supports_positions``: the causal mask honors caller-supplied
+    (non-arange) positions — kernels that mask by row/block index must
+    declare False so packed-sequence calls fall back to (or loudly
+    refuse into) the positions-aware reference instead of silently
+    attending across the wrong boundary.
+    ``supports_logit_scale``: the backend honors
+    ``AttentionSpec.logit_scale``; backends with a baked 1/sqrt(dh)
+    scale declare False and are excluded for specs that override it.
+    """
+
+    supports_decode: bool = False
+    supports_mesh: bool = True
+    supports_pad_mask: bool = True
+    supports_positions: bool = True
+    supports_logit_scale: bool = False
+    needs_tpu: bool = False
+    max_seq: Optional[int] = None
+    cache_layout: str = ""          # "", "append", "ring", "pages", ...
+
+
+@dataclass(frozen=True)
+class Backend:
+    """One (variant, impl) implementation.
+
+    apply(spec, q, k, v, *, state, positions, pad_mask, update_state,
+          interpret) -> (out, new_state)
+    decode(spec, q, k, v, *, cache, pos, state, interpret)
+          -> (out, new_cache)                      [supports_decode only]
+    init_cache(spec, B, max_len, dtype) -> dict    [decode cache layout]
+    prefill_fill(spec, cache, q, k, v, *, positions, state) -> dict
+    cache_head_axes: leaf name -> axis of the head dim in pool coords
+          (leaves are (G, B, head, ...) once stacked over scan groups) —
+          consumed by dist.sharding.cache_sharding.
+    cache_fill: leaf name -> reset/init fill value (default 0) — consumed
+          by the slot pool's reset_slot.
+    """
+
+    variant: str
+    impl: str
+    apply: Callable
+    caps: Capabilities
+    decode: Optional[Callable] = None
+    init_cache: Optional[Callable] = None
+    prefill_fill: Optional[Callable] = None
+    cache_head_axes: Mapping[str, int] = field(default_factory=dict)
+    cache_fill: Mapping[str, int] = field(default_factory=dict)
+    priority: int = 0
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.variant, self.impl)
+
+    @property
+    def name(self) -> str:
+        return f"{self.variant}/{self.impl}"
+
+
+_REGISTRY: Dict[Tuple[str, str], Backend] = {}
+
+
+def register(backend: Backend) -> Backend:
+    if backend.key in _REGISTRY:
+        raise ValueError(f"backend {backend.name} already registered")
+    if backend.caps.supports_decode and backend.decode is None:
+        raise ValueError(f"{backend.name}: supports_decode without a "
+                         f"decode fn")
+    if backend.caps.supports_decode and backend.init_cache is None:
+        raise ValueError(f"{backend.name}: supports_decode without a "
+                         f"declared cache layout (init_cache)")
+    _REGISTRY[backend.key] = backend
+    return backend
+
+
+def unregister(variant: str, impl: str) -> None:
+    """Test hook: remove a backend (e.g. a dummy registered by a test)."""
+    _REGISTRY.pop((variant, impl), None)
+
+
+def get(variant: str, impl: str) -> Backend:
+    try:
+        return _REGISTRY[(variant, impl)]
+    except KeyError:
+        impls = sorted(i for v, i in _REGISTRY if v == variant)
+        raise BackendResolutionError(
+            f"no backend registered for variant={variant!r} impl={impl!r};"
+            f" registered impls for this variant: {impls or 'none'}"
+        ) from None
+
+
+def backends_for(variant: str) -> List[Backend]:
+    return [b for b in _REGISTRY.values() if b.variant == variant]
+
+
+def registered() -> List[Backend]:
+    """All registered backends (benchmark sweeps, the parity matrix)."""
+    return list(_REGISTRY.values())
+
+
+def cache_sharding_hints() -> Dict[str, int]:
+    """Merged leaf-name -> head-axis map declared by every registered
+    backend (pool coords). dist.sharding consumes this instead of
+    hardcoding cache leaf names."""
+    hints: Dict[str, int] = {}
+    for b in _REGISTRY.values():
+        for leaf, axis in b.cache_head_axes.items():
+            prev = hints.setdefault(leaf, axis)
+            if prev != axis:
+                raise ValueError(
+                    f"conflicting head-axis hints for cache leaf "
+                    f"{leaf!r}: {prev} vs {axis} ({b.name})")
+    return hints
+
+
+def cache_fill_values() -> Dict[str, int]:
+    """Merged leaf-name -> reset fill value declared by the backends."""
+    fills: Dict[str, int] = {}
+    for b in _REGISTRY.values():
+        for leaf, val in b.cache_fill.items():
+            prev = fills.setdefault(leaf, val)
+            if prev != val:
+                raise ValueError(
+                    f"conflicting fill values for cache leaf {leaf!r}: "
+                    f"{prev} vs {val} ({b.name})")
+    return fills
+
+
+def _gaps(b: Backend, *, decode: bool, padded: bool,
+          positioned: bool, scaled: bool, seq_len: Optional[int],
+          mesh_devices: int, platform: str, forced: bool) -> List[str]:
+    """Capability gaps of ``b`` for this call. ``needs_tpu`` only counts
+    against auto-selection (forced backends fall back to interpret)."""
+    gaps = []
+    if decode and not b.caps.supports_decode:
+        gaps.append("call needs a decode path (cache given) but "
+                    "supports_decode=False")
+    if padded and not b.caps.supports_pad_mask:
+        gaps.append("call has a pad_mask but supports_pad_mask=False")
+    if positioned and not b.caps.supports_positions:
+        gaps.append("call has explicit positions but the backend masks "
+                    "by row index (supports_positions=False)")
+    if scaled and not b.caps.supports_logit_scale:
+        gaps.append("spec sets logit_scale but the backend's scale is "
+                    "baked at 1/sqrt(head_dim) "
+                    "(supports_logit_scale=False)")
+    if mesh_devices > 1 and not b.caps.supports_mesh:
+        gaps.append(f"call runs on a {mesh_devices}-device mesh but "
+                    f"supports_mesh=False")
+    if (seq_len is not None and b.caps.max_seq is not None
+            and seq_len > b.caps.max_seq):
+        gaps.append(f"seq_len {seq_len} exceeds max_seq {b.caps.max_seq}")
+    if not forced and b.caps.needs_tpu and platform != "tpu":
+        gaps.append(f"needs_tpu on platform {platform!r}")
+    return gaps
+
+
+def resolve(spec: AttentionSpec, *, decode: bool = False,
+            padded: bool = False, positioned: bool = False,
+            seq_len: Optional[int] = None, mesh=None,
+            impl: Optional[str] = None, platform: str = "cpu") -> Backend:
+    """Pick the backend for this call, or raise loudly.
+
+    ``impl``: explicit override — capability mismatches are errors, not
+    silent fallbacks. Without it: best (highest-priority) registered
+    backend whose capabilities cover the call on ``platform``.
+    """
+    mesh_devices = getattr(mesh, "size", 1) if mesh is not None else 1
+    gap_kw = dict(decode=decode, padded=padded, positioned=positioned,
+                  scaled=spec.logit_scale is not None, seq_len=seq_len,
+                  mesh_devices=mesh_devices, platform=platform)
+    if impl is not None:
+        b = get(spec.variant, impl)
+        gaps = _gaps(b, forced=True, **gap_kw)
+        if gaps:
+            raise BackendResolutionError(
+                f"forced backend {b.name} cannot serve this call:\n  - "
+                + "\n  - ".join(gaps))
+        return b
+    cands = backends_for(spec.variant)
+    if not cands:
+        raise BackendResolutionError(
+            f"no backends registered for variant {spec.variant!r}")
+    ok = [b for b in cands if not _gaps(b, forced=False, **gap_kw)]
+    if not ok:
+        detail = "; ".join(
+            f"{b.name}: "
+            f"{', '.join(_gaps(b, forced=False, **gap_kw))}"
+            for b in cands)
+        raise BackendResolutionError(
+            f"no registered backend for variant {spec.variant!r} covers "
+            f"this call ({detail})")
+    return max(ok, key=lambda b: b.priority)

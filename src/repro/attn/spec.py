@@ -1,0 +1,201 @@
+"""AttentionSpec — the declarative description of one attention site.
+
+A spec says *what* attention a layer computes (variant, window/cluster
+geometry, causality, GQA split, rope, logit scale, chunking); the registry
+(`repro.attn.registry`) says *how* (which backend implements it on the
+current platform). Everything a backend needs is on the spec — backends
+never reach back into ``ModelConfig``.
+
+Specs are frozen dataclasses registered as *static* pytrees: they hash,
+compare by value, and pass through ``jax.jit`` closures/arguments without
+contributing tracers. ``spec_for_layer(cfg, variant)`` is the single
+place config fields are interpreted (and is cached, so a spec is built
+once per (config, variant) pair).
+
+Chunking contract (`chunk`): ``None`` = auto — the full-attention
+reference picks an online-softmax KV chunk when the sequence is long
+(N > 4096); ``0`` = force one-shot softmax; ``c > 0`` = force chunk c.
+This is resolved at call time by ``resolve_chunk`` because the auto rule
+depends on the runtime sequence length (an explicit 0 used to be
+un-settable for long N when the config field doubled as the sentinel).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig, RoutingConfig, with_overrides
+
+VARIANTS = ("full", "local", "routing", "local+routing")
+
+# Non-routing layers of a routing_layers-suffix config fall back to the
+# cheapest variant that preserves the paper's locality prior.
+_DOWNGRADE = {"local+routing": "local", "routing": "local"}
+
+AUTO_CHUNK_THRESHOLD = 4096
+AUTO_CHUNK = 1024
+
+
+@dataclass(frozen=True)
+class AttentionSpec:
+    """One attention site, fully described.
+
+    variant        full | local | routing | local+routing
+    num_heads      query heads H
+    num_kv_heads   key/value heads (GQA; == H for MHA)
+    head_dim       per-head dim
+    causal         causal mask on original positions
+    window         local-attention window (variants with a local part)
+    rope_theta     rotary base, or None for no rope (routing heads are
+                   never roped — routing vectors are content, not position)
+    logit_scale    softmax scale override (None = 1/sqrt(head_dim))
+    chunk          KV chunk for the full variant: None=auto, 0=one-shot
+    routing        RoutingConfig (variants with a routing part), already
+                   normalized against the model's causality
+    routing_heads  Hr of the local+routing head split (0 elsewhere)
+    """
+
+    variant: str
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int = 0
+    rope_theta: Optional[float] = None
+    logit_scale: Optional[float] = None
+    chunk: Optional[int] = None
+    routing: Optional[RoutingConfig] = None
+    routing_heads: int = 0
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"unknown attention variant {self.variant!r}; "
+                f"expected one of {VARIANTS}")
+        if self.num_heads % max(self.num_kv_heads, 1):
+            raise ValueError(
+                f"num_heads {self.num_heads} not divisible by num_kv_heads "
+                f"{self.num_kv_heads}")
+        if "local" in self.variant and self.window <= 0:
+            raise ValueError(f"variant {self.variant!r} needs window > 0")
+        if "routing" in self.variant and self.routing is None:
+            raise ValueError(f"variant {self.variant!r} needs a "
+                             f"RoutingConfig")
+        if self.variant == "local+routing":
+            head_split(self)    # raises on GQA-misaligned splits
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+jax.tree_util.register_static(AttentionSpec)
+
+
+def head_split(spec) -> Tuple[int, int, int, int]:
+    """(H_local, H_routing, Hkv_local, Hkv_routing) of a local+routing
+    split. ``spec`` may be an AttentionSpec (its ``routing_heads`` field
+    is authoritative when set) or a ModelConfig (Hr comes from
+    ``routing.routing_heads``; 0 = half the heads)."""
+    H, Hkv = spec.num_heads, spec.num_kv_heads
+    g = H // Hkv
+    rh = getattr(spec, "routing_heads", 0) or spec.routing.routing_heads
+    Hr = min(rh or H // 2, H)
+    Hl = H - Hr
+    if Hkv == 1:
+        return Hl, Hr, 1, 1
+    if Hr % g or Hl % g:
+        raise AssertionError(
+            f"routing head split {Hl}/{Hr} must align with GQA groups "
+            f"g={g}")
+    return Hl, Hr, Hl // g, Hr // g
+
+
+def variant_for_layer(cfg: ModelConfig, layer_idx: int) -> str:
+    """The attention variant layer ``layer_idx`` runs: the config's
+    variant on routing layers (or everywhere when routing_layers is
+    empty), the downgraded variant elsewhere."""
+    rl = set(cfg.routing.routing_layers)
+    if not rl or layer_idx in rl:
+        return cfg.attention
+    return _DOWNGRADE.get(cfg.attention, cfg.attention)
+
+
+def _normalized_routing(cfg: ModelConfig) -> RoutingConfig:
+    rc = cfg.routing
+    if rc.causal != cfg.is_causal:
+        rc = with_overrides(rc, causal=cfg.is_causal)
+    if not cfg.is_causal and rc.share_qk:
+        rc = with_overrides(rc, share_qk=False)
+    return rc
+
+
+@functools.lru_cache(maxsize=None)
+def spec_for_layer(cfg: ModelConfig, variant: str) -> AttentionSpec:
+    """Build the (normalized) AttentionSpec a layer with attention mode
+    ``variant`` runs under ``cfg``. Degenerate local+routing head splits
+    collapse to the surviving variant here, so backends and cache layouts
+    never see an empty head group."""
+    rope = cfg.rope_theta if cfg.position == "rope" else None
+    common = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                  head_dim=cfg.head_dim_, causal=cfg.is_causal,
+                  rope_theta=rope, chunk=cfg.attn_chunk)
+    if variant == "full":
+        return AttentionSpec(variant="full", **common)
+    if variant == "local":
+        return AttentionSpec(variant="local", window=cfg.attn_window,
+                             **common)
+    rc = _normalized_routing(cfg)
+    if variant == "routing":
+        return AttentionSpec(variant="routing", routing=rc, **common)
+    if variant == "local+routing":
+        spec = AttentionSpec(variant="local+routing", routing=rc,
+                             window=rc.local_window,
+                             routing_heads=head_split(
+                                 with_overrides(cfg, routing=rc))[1],
+                             **common)
+        Hl, Hr, _, _ = head_split(spec)
+        if Hr == 0:         # Table-1 edge: no routing heads left
+            return replace(spec, variant="local", routing=None,
+                           routing_heads=0)
+        if Hl == 0:         # all heads route
+            return replace(spec, variant="routing", window=0,
+                           routing_heads=0)
+        return spec
+    raise ValueError(f"unknown attention variant {variant!r}")
+
+
+def specs_for_model(cfg: ModelConfig) -> Tuple[AttentionSpec, ...]:
+    """The distinct AttentionSpecs appearing anywhere in the model's
+    stack (consumed by dist.sharding.make_constrain_fn for layout
+    validation)."""
+    if cfg.family == "ssm":
+        return ()
+    out = []
+    for i in range(cfg.num_layers):
+        s = spec_for_layer(cfg, variant_for_layer(cfg, i))
+        if s not in out:
+            out.append(s)
+    return tuple(out)
+
+
+def resolve_chunk(spec: AttentionSpec, seq_len: int) -> int:
+    """Runtime KV-chunk resolution: explicit values win (0 = one-shot),
+    None auto-chunks long sequences."""
+    if spec.chunk is not None:
+        return spec.chunk
+    return AUTO_CHUNK if seq_len > AUTO_CHUNK_THRESHOLD else 0
+
+
+def seq_shardable(spec: AttentionSpec, tp: int) -> bool:
+    """Whether sequence-sharding the residual stream over a ``tp``-way
+    model axis is collective-free for this spec. full/local attention
+    re-gather inside the attention op (XLA inserts the collectives);
+    routing's balanced top-k is only shard-local when its segment fold
+    aligns with the model axis (RoutingConfig.segments % tp == 0)."""
+    if tp <= 1 or spec.routing is None:
+        return True
+    return spec.routing.segments % tp == 0

@@ -100,7 +100,10 @@ class ModelConfig:
     # --- logits ---
     logit_softcap: float = 0.0
     dropout: float = 0.0
-    attn_chunk: int = 0             # 0 => auto (chunk when N > 4096)
+    # KV chunk of the full-attention reference: None => auto (the
+    # AttentionSpec resolves a chunk when N > 4096), 0 => force one-shot
+    # softmax even for long N, c > 0 => force chunk c
+    attn_chunk: Optional[int] = None
 
     @property
     def head_dim_(self) -> int:

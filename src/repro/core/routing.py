@@ -96,7 +96,8 @@ def routed_attention(q: jax.Array,
                      pad_mask: Optional[jax.Array] = None,
                      update_state: bool = True,
                      return_attn: bool = False,
-                     impl: str = "xla") -> RoutingOutput:
+                     impl: str = "xla",
+                     interpret: bool = True) -> RoutingOutput:
     """Content-routed sparse attention.
 
     q, v: (B, H, N, dh); k: same or None (shared-QK causal mode).
@@ -105,6 +106,7 @@ def routed_attention(q: jax.Array,
         blocks order-correct.
     pad_mask: (B, N) bool, True = real token. Padding is excluded from
         top-k selection, attention, and centroid updates (paper Section 4.1).
+    interpret: Pallas interpret mode for impl="pallas" (True off-TPU).
     """
     B, H, N, dh = q.shape
     if positions is None:
@@ -132,7 +134,8 @@ def routed_attention(q: jax.Array,
             fold(q), None if k is None else fold(k), fold(v), state, sub,
             positions=fold2(positions),
             pad_mask=None if pad_mask is None else fold2(pad_mask),
-            update_state=update_state, return_attn=False, impl=impl)
+            update_state=update_state, return_attn=False, impl=impl,
+            interpret=interpret)
         o = out.out.reshape(B, ns, H, Nl, dh).transpose(0, 2, 1, 3, 4) \
                    .reshape(B, H, N, dh)
         return RoutingOutput(out=o, state=out.state)
@@ -174,7 +177,8 @@ def routed_attention(q: jax.Array,
     if impl == "pallas":
         from repro.kernels import ops as kops
         og = kops.routed_attention_blocks(
-            qg, kg, vg, pos_q, pos_k, causal=cfg.causal, valid_k=valid_k)
+            qg, kg, vg, pos_q, pos_k, causal=cfg.causal, valid_k=valid_k,
+            interpret=interpret)
         attn = None
     else:
         og, attn = _block_attention(qg, kg, vg, pos_q, pos_k, cfg.causal,

@@ -53,8 +53,15 @@ _REPLICATED = {"vr", "vc", "scale", "bias", "router", "conv_w", "conv_b",
                "A_log", "D", "dt_bias", "b_a", "b_x", "mask_emb",
                "xgate_attn", "xgate_ffn", "count"}
 
-# Decode-cache leaves laid out (G, B, H, ...) — head axis at position 2.
-_CACHE_HEAD_LEAVES = {"k", "v", "lk", "lv", "rk", "rv", "rlen", "state"}
+# Decode-cache head axes: attention-backend leaves declare theirs through
+# the repro.attn registry (Backend.cache_head_axes, pool coords
+# (G, B, head, ...)); the SSD recurrent state is the one non-attention
+# cache with a head axis and is appended here.
+def _cache_head_axes():
+    from repro import attn
+    hints = dict(attn.cache_sharding_hints())
+    hints["state"] = 2
+    return hints
 
 
 # ---------------------------------------------------------------------------
@@ -211,8 +218,10 @@ def replicated(mesh, tree):
 def cache_sharding(mesh, cache, batch: int):
     """Decode caches / engine slot pools: every leaf is (G, B, ...) with
     the slot (batch) axis at position 1 — slots over the data axes and
-    the head axis (position 2 of attention/SSD leaves) over "model"."""
+    the head axes over "model", at the positions the attention backends
+    declare for their cache layouts (repro.attn registry hints)."""
     dp = dp_axes(mesh)
+    head_axes = _cache_head_axes()
 
     def one(path, leaf):
         names = _path_names(path)
@@ -221,17 +230,25 @@ def cache_sharding(mesh, cache, batch: int):
         if (leaf.ndim >= 2 and leaf.shape[1] == batch
                 and _fits(leaf.shape, 1, mesh, dp)):
             spec[1] = dp
-        if (name in _CACHE_HEAD_LEAVES and leaf.ndim >= 3
-                and _fits(leaf.shape, 2, mesh, "model")):
-            spec[2] = "model"
+        ax = head_axes.get(name)
+        if (ax is not None and leaf.ndim > ax
+                and _fits(leaf.shape, ax, mesh, "model")):
+            spec[ax] = "model"
         return NamedSharding(mesh, P(*spec))
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def make_constrain_fn(mesh, seq_parallel: bool = False,
-                      fsdp_prefetch: bool = False):
+                      fsdp_prefetch: bool = False, attn_specs=()):
     """Activation constraint for the residual stream, applied between
     scan groups (models/transformer.apply_stack) and at stack entry.
+
+    ``attn_specs``: the model's AttentionSpecs (attn.specs_for_model).
+    With ``seq_parallel`` they are validated against the layout: a
+    routing spec whose segment fold does not align with the model axis
+    (attn.seq_shardable) would silently re-gather the sequence inside
+    every balanced top-k — that is rejected loudly here instead of
+    showing up as a collective regression.
 
     x is (B, N, d): batch over the data axes; with ``seq_parallel`` the
     sequence dim is additionally sharded over "model" (Megatron-SP — the
@@ -251,6 +268,17 @@ def make_constrain_fn(mesh, seq_parallel: bool = False,
 
     Dims that do not divide their axis stay unconstrained — GSPMD picks.
     """
+    if seq_parallel and attn_specs:
+        from repro import attn
+        tp = _axis_size(mesh, "model")
+        bad = [s for s in attn_specs if not attn.seq_shardable(s, tp)]
+        if bad:
+            raise ValueError(
+                f"seq_parallel over a {tp}-way model axis, but "
+                f"{len(bad)} attention spec(s) route globally "
+                f"(RoutingConfig.segments must be a multiple of {tp} for "
+                f"shard-local balanced top-k): "
+                f"{[f'{s.variant}/segments={s.routing.segments}' for s in bad]}")
     dp = dp_axes(mesh)
 
     def constrain(x):

@@ -211,6 +211,10 @@ def _use_fsdp(cfg: ModelConfig) -> bool:
 def build_train(arch: str, cfg: ModelConfig, cell, mesh):
     from repro.train.train_step import init_train_state, make_train_step
     run = RunConfig(model=cfg, train=_train_cfg(arch, cfg, cell))
+    # deliberately NO attn_specs here: the dryrun is a cost explorer and
+    # must be able to price seq-parallel layouts that global routing
+    # would re-gather under (launch/train.py is where the
+    # attn.seq_shardable validation refuses them for real runs)
     constrain = shd.make_constrain_fn(mesh, seq_parallel=SEQ_PARALLEL)
     ts_shapes = jax.eval_shape(
         functools.partial(init_train_state, run), jax.random.PRNGKey(0))
@@ -224,7 +228,7 @@ def build_train(arch: str, cfg: ModelConfig, cell, mesh):
             grads, ts_spec.params)
 
     fn = make_train_step(run, constrain_fn=constrain,
-                         grad_constrain=grad_constrain)
+                         grad_constrain=grad_constrain, mesh=mesh)
     b_spec = shd.batch_sharding(mesh, batch)
     metrics_shape = jax.eval_shape(fn, ts_shapes, batch)[1]
     m_spec = shd.replicated(mesh, metrics_shape)
@@ -239,7 +243,9 @@ def build_prefill(arch: str, cfg: ModelConfig, cell, mesh):
     def forward(params, kstate, batch):
         logits, _, _ = apply_model(
             params, kstate, batch, cfg, update_state=False,
-            constrain_fn=shd.make_constrain_fn(mesh, seq_parallel=True))
+            # unvalidated SP on purpose — see build_train's constrain note
+            constrain_fn=shd.make_constrain_fn(mesh, seq_parallel=True),
+            mesh=mesh)
         return logits
 
     pk = jax.eval_shape(functools.partial(init_model, cfg),

@@ -99,8 +99,10 @@ def main():
         functools.partial(init_train_state, run, mesh=mesh),
         jax.random.PRNGKey(0))
     ts_spec = shd.train_state_sharding(mesh, ts_shapes, fsdp=use_fsdp)
+    from repro.attn import specs_for_model
     constrain = (None if compressed else shd.make_constrain_fn(
-        mesh, args.seq_parallel, fsdp_prefetch=use_fsdp))
+        mesh, args.seq_parallel, fsdp_prefetch=use_fsdp,
+        attn_specs=specs_for_model(cfg)))
     fn = make_train_step(run, constrain_fn=constrain, mesh=mesh)
 
     def pinned_fn(ts, batch):

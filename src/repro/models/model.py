@@ -42,9 +42,9 @@ def init_model(cfg: ModelConfig, key: jax.Array):
 
 def apply_model(params, kstate, batch: Dict[str, jax.Array],
                 cfg: ModelConfig, *, update_state: bool = True,
-                impl: str = "xla", moe_impl: str = "einsum",
+                impl: Optional[str] = None, moe_impl: str = "einsum",
                 remat: str = "none", drop_rng: Optional[jax.Array] = None,
-                constrain_fn=None):
+                constrain_fn=None, mesh=None):
     positions = batch.get("positions")
     pad_mask = batch.get("pad_mask")
     if cfg.family == "encoder":
@@ -59,7 +59,8 @@ def apply_model(params, kstate, batch: Dict[str, jax.Array],
         positions=positions, pad_mask=pad_mask,
         image_embeds=batch.get("image_embeds"),
         update_state=update_state, impl=impl, moe_impl=moe_impl,
-        remat=remat, drop_rng=drop_rng, constrain_fn=constrain_fn)
+        remat=remat, drop_rng=drop_rng, constrain_fn=constrain_fn,
+        mesh=mesh)
     epilogue = getattr(constrain_fn, "epilogue", None)
     if epilogue is not None:
         x = epilogue(x)          # SP epilogue: re-gather seq for the LM head

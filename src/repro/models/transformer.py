@@ -21,11 +21,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, RoutingConfig, with_overrides
+from repro import attn as attn_api
+from repro.attn.spec import head_split, spec_for_layer, variant_for_layer
+from repro.configs.base import ModelConfig
 from repro.core.attention import full_attention
-from repro.core.local import local_attention
-from repro.core.kmeans import KMeansState, init_kmeans
-from repro.core.routing import routed_attention
+from repro.core.kmeans import init_kmeans
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -43,19 +43,9 @@ class LayerSpec:
 # ---------------------------------------------------------------------------
 # Segment construction
 # ---------------------------------------------------------------------------
-def _downgrade(attn: str) -> str:
-    return {"local+routing": "local", "routing": "local"}.get(attn, attn)
-
-
 def per_layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
     Lr = cfg.num_layers
-    rl = set(cfg.routing.routing_layers)
-
-    def attn_mode(i):
-        if not rl or i in rl:
-            return cfg.attention
-        return _downgrade(cfg.attention)
-
+    attn_mode = lambda i: variant_for_layer(cfg, i)  # noqa: E731
     specs = []
     for i in range(Lr):
         if cfg.family == "ssm":
@@ -99,24 +89,8 @@ def build_segments(cfg: ModelConfig) -> List[Tuple[Tuple[LayerSpec, ...], int]]:
     return segments
 
 
-# ---------------------------------------------------------------------------
-# Head split for local+routing (paper: half local, half routing)
-# ---------------------------------------------------------------------------
-def head_split(cfg: ModelConfig) -> Tuple[int, int, int, int]:
-    """Returns (H_local, H_routing, Hkv_local, Hkv_routing)."""
-    H, Hkv = cfg.num_heads, cfg.num_kv_heads
-    g = H // Hkv
-    Hr = min(cfg.routing.routing_heads or H // 2, H)
-    Hl = H - Hr
-    if Hkv == 1:
-        return Hl, Hr, 1, 1
-    assert Hr % g == 0 and Hl % g == 0, (
-        f"routing head split {Hl}/{Hr} must align with GQA groups g={g}")
-    return Hl, Hr, Hl // g, Hr // g
-
-
-def _expand_kv(x: jax.Array, reps: int) -> jax.Array:
-    return jnp.repeat(x, reps, axis=1) if reps > 1 else x
+# head_split (the paper's local/routing split) now lives in
+# repro.attn.spec and is re-exported above for existing importers.
 
 
 def where_active(active: jax.Array, new_tree, old_tree, batch_axis: int = 1):
@@ -172,77 +146,18 @@ def layer_kstate(key, spec: LayerSpec, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
-# Attention dispatch
+# Attention dispatch — one call into repro.attn; variant math, rope
+# policy, head splitting, and backend selection all live behind
+# attn.attend (DESIGN.md §8)
 # ---------------------------------------------------------------------------
-def _routing_cfg(cfg: ModelConfig) -> RoutingConfig:
-    rc = cfg.routing
-    if rc.causal != cfg.is_causal:
-        rc = with_overrides(rc, causal=cfg.is_causal)
-    if not cfg.is_causal and rc.share_qk:
-        rc = with_overrides(rc, share_qk=False)
-    return rc
-
-
 def self_attention(p, h, cfg: ModelConfig, mode: str, kmu,
-                   positions, pad_mask, update_state, impl="xla"):
+                   positions, pad_mask, update_state, impl=None, mesh=None):
     """h: (B,N,d) -> ((B,N,d), new_kmu)."""
-    B, N, _ = h.shape
     q, k, v = L.qkv_project(p, h, cfg, positions, rope=False)
-    H, Hkv = cfg.num_heads, cfg.num_kv_heads
-    g = H // Hkv
-    causal = cfg.is_causal
-    chunk = cfg.attn_chunk or (1024 if N > 4096 else 0)
-
-    def roped(qq, kk):
-        if cfg.position != "rope":
-            return qq, kk
-        pos = positions if positions is not None else \
-            jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
-        return (L.apply_rope(qq, pos, cfg.rope_theta),
-                L.apply_rope(kk, pos, cfg.rope_theta))
-
-    new_kmu = kmu
-    if mode == "full":
-        qr, kr = roped(q, k)
-        o = full_attention(qr, kr, v, causal, pad_mask, chunk=chunk)
-    elif mode == "local":
-        qr, kr = roped(q, k)
-        o = local_attention(qr, kr, v, cfg.attn_window, causal, pad_mask)
-    elif mode == "routing":
-        rc = _routing_cfg(cfg)
-        v_e = _expand_kv(v, g)
-        k_in = None if (rc.share_qk and causal) else _expand_kv(k, g)
-        ro = routed_attention(q, k_in, v_e, KMeansState(mu=kmu), rc,
-                              positions, pad_mask, update_state, impl=impl)
-        o, new_kmu = ro.out, ro.state.mu
-    elif mode == "local+routing":
-        Hl, Hr, kvl, kvr = head_split(cfg)
-        if Hr == 0:                      # degenerate splits (Table 1 edges)
-            return self_attention(p, h, cfg, "local", kmu, positions,
-                                  pad_mask, update_state, impl)
-        if Hl == 0:
-            return self_attention(p, h, cfg, "routing", kmu, positions,
-                                  pad_mask, update_state, impl)
-        rc = _routing_cfg(cfg)
-        if Hkv == 1:
-            kl = kr_ = k
-            vl = vr_ = v
-        else:
-            kl, kr_ = k[:, :kvl], k[:, kvl:]
-            vl, vr_ = v[:, :kvl], v[:, kvl:]
-        ql, kl_r = roped(q[:, :Hl], kl)
-        o_l = local_attention(ql, kl_r, vl, cfg.routing.local_window,
-                              causal, pad_mask)
-        v_e = _expand_kv(vr_, Hr // vr_.shape[1])
-        k_in = None if (rc.share_qk and causal) else \
-            _expand_kv(kr_, Hr // kr_.shape[1])
-        ro = routed_attention(q[:, Hl:], k_in, v_e, KMeansState(mu=kmu), rc,
-                              positions, pad_mask, update_state, impl=impl)
-        o = jnp.concatenate([o_l, ro.out], axis=1)
-        new_kmu = ro.state.mu
-    else:
-        raise ValueError(f"unknown attention mode {mode}")
-    return L.out_project(p, o), new_kmu
+    out = attn_api.attend(spec_for_layer(cfg, mode), q, k, v, state=kmu,
+                          positions=positions, pad_mask=pad_mask,
+                          update_state=update_state, impl=impl, mesh=mesh)
+    return L.out_project(p, out.out), out.state
 
 
 def cross_attention(p, h, image_embeds, cfg: ModelConfig, pad_mask=None):
@@ -269,8 +184,8 @@ def _dropout(x, rate, rng):
 
 def apply_layer(spec: LayerSpec, p, kmu, x, cfg: ModelConfig, *,
                 positions=None, pad_mask=None, image_embeds=None,
-                update_state=True, impl="xla", moe_impl="einsum",
-                drop_rng=None):
+                update_state=True, impl=None, moe_impl="einsum",
+                drop_rng=None, mesh=None):
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_kmu = kmu
     rngs = (jax.random.split(drop_rng, 2) if drop_rng is not None
@@ -283,7 +198,7 @@ def apply_layer(spec: LayerSpec, p, kmu, x, cfg: ModelConfig, *,
         else:
             a, new_kmu = self_attention(p["attn"], h, cfg, spec.attn, kmu,
                                         positions, pad_mask, update_state,
-                                        impl)
+                                        impl, mesh=mesh)
         x = x + _dropout(a, cfg.dropout, rngs[0])
         h2 = L.apply_norm(p["ln2"], x, cfg.norm)
         if spec.kind == "moe":
@@ -336,9 +251,9 @@ def init_stack(key, cfg: ModelConfig):
 
 def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
                 positions=None, pad_mask=None, image_embeds=None,
-                update_state=True, impl="xla", moe_impl="einsum",
+                update_state=True, impl=None, moe_impl="einsum",
                 remat="none", drop_rng=None,
-                constrain_fn: Optional[Callable] = None):
+                constrain_fn: Optional[Callable] = None, mesh=None):
     segments = build_segments(cfg)
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_seg_kstate = []
@@ -369,7 +284,7 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
                     spec, p_group[i], k_group.get(str(i)), x, cfg,
                     positions=positions, pad_mask=pad_mask,
                     image_embeds=image_embeds, update_state=update_state,
-                    impl=impl, moe_impl=moe_impl, drop_rng=rng_i)
+                    impl=impl, moe_impl=moe_impl, drop_rng=rng_i, mesh=mesh)
                 if str(i) in k_group:
                     new_k[str(i)] = nk
                 aux_g = {k: aux_g[k] + aux_i[k] for k in AUX_KEYS}

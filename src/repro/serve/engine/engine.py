@@ -41,7 +41,8 @@ from repro.serve.engine.pool import init_pool, reset_slot, write_slot
 from repro.serve.engine.scheduler import FCFSScheduler
 from repro.serve.engine.sampling import (SamplingParams, request_base_key,
                                          request_key, sample_tokens)
-from repro.serve.serving import init_cache, make_serve_step, prefill
+from repro.serve.serving import (decode_backends, init_cache,
+                                 make_serve_step, prefill)
 
 WAITING, PREFILL, DECODE, FINISHED = "WAITING", "PREFILL", "DECODE", "FINISHED"
 
@@ -70,9 +71,9 @@ class _Slot:
     base_key: np.ndarray        # request_base_key, host-side
 
 
-def _make_decode_sample(cfg: ModelConfig):
+def _make_decode_sample(cfg: ModelConfig, mesh=None):
     """Fused decode + per-slot key fold-in + sampling: ONE dispatch/step."""
-    serve_step = make_serve_step(cfg)
+    serve_step = make_serve_step(cfg, mesh=mesh)
 
     def decode_sample(params, kstate, pool, tokens, pos, active,
                       base_keys, tok_idx, temps, top_ks, top_ps):
@@ -85,10 +86,10 @@ def _make_decode_sample(cfg: ModelConfig):
     return decode_sample
 
 
-def _make_decode_greedy(cfg: ModelConfig):
+def _make_decode_greedy(cfg: ModelConfig, mesh=None):
     """Greedy fast path: skips the sort/PRNG machinery of the full sampler
     (several ms/step on CPU) when every active slot decodes at temp 0."""
-    serve_step = make_serve_step(cfg)
+    serve_step = make_serve_step(cfg, mesh=mesh)
 
     def decode_greedy(params, kstate, pool, tokens, pos, active):
         logits, new_pool = serve_step(params, kstate, pool, tokens, pos,
@@ -110,18 +111,23 @@ class InferenceEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.mesh = mesh
+        # every decode/prefill step resolves its attention backends (and
+        # with them the pool's cache layout) from the repro.attn registry;
+        # the resolution is recorded here for observability
+        self.attn_backends = decode_backends(cfg, mesh=mesh)
         # the engine owns self.pool exclusively and reassigns it on every
         # call, so the decode steps donate it for in-place cache updates
         # (donation is a no-op warning on backends that lack aliasing)
-        self._decode_sample = jax.jit(_make_decode_sample(cfg),
+        self._decode_sample = jax.jit(_make_decode_sample(cfg, mesh=mesh),
                                       donate_argnums=(2,))
-        self._decode_greedy = jax.jit(_make_decode_greedy(cfg),
+        self._decode_greedy = jax.jit(_make_decode_greedy(cfg, mesh=mesh),
                                       donate_argnums=(2,))
-        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg))
-        self.pool = init_pool(cfg, max_slots, max_len)
+        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg,
+                                                  mesh=mesh))
+        self.pool = init_pool(cfg, max_slots, max_len, mesh=mesh)
         # prefill never mutates its cache argument (functional), so one
         # fresh B=1 lane serves every admission without reallocation
-        self._fresh_lane = init_cache(cfg, 1, max_len)
+        self._fresh_lane = init_cache(cfg, 1, max_len, mesh=mesh)
         if mesh is not None:
             # SPMD serving: slots over the data axes, attention heads over
             # "model" (dist/sharding rules). Inputs are committed once here;

@@ -28,9 +28,11 @@ from repro.configs.base import ModelConfig
 from repro.serve.serving import cache_reset_value, init_cache
 
 
-def init_pool(cfg: ModelConfig, max_slots: int, max_len: int):
-    """A pool of ``max_slots`` independent cache lanes (one per request)."""
-    return init_cache(cfg, max_slots, max_len)
+def init_pool(cfg: ModelConfig, max_slots: int, max_len: int, mesh=None):
+    """A pool of ``max_slots`` independent cache lanes (one per request).
+    ``mesh`` must match the engine's decode steps so the pool layout and
+    the decode-resolved backends agree."""
+    return init_cache(cfg, max_slots, max_len, mesh=mesh)
 
 
 def _leaf_name(path) -> str:

@@ -22,44 +22,36 @@ training exactly (tested); routing decode uses argmax-cluster membership
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro import attn as attn_api
+from repro.attn.spec import spec_for_layer
 from repro.configs.base import ModelConfig
 from repro.core.attention import full_attention
-from repro.core.kmeans import normalize_routing
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
-from repro.models.transformer import (build_segments, head_split,
-                                      _expand_kv, _routing_cfg, where_active)
-
-_BIG_NEG = -1e9
-
-# Fill values for cache leaves; every leaf not listed resets to 0. The slot
-# pool (serve/engine/pool.py) uses this to return a freed lane to its
-# just-initialized state without reallocation.
-CACHE_FILL_VALUES = {"lpos": -1}
+from repro.models.transformer import build_segments, where_active
 
 
 def cache_reset_value(leaf_name: str) -> int:
-    """Initial/reset fill value for a named cache leaf."""
-    return CACHE_FILL_VALUES.get(leaf_name, 0)
+    """Initial/reset fill value for a named cache leaf. Attention-backend
+    leaves declare theirs through the registry (Backend.cache_fill);
+    every leaf not listed resets to 0. The slot pool
+    (serve/engine/pool.py) uses this to return a freed lane to its
+    just-initialized state without reallocation."""
+    return attn_api.cache_fill_values().get(leaf_name, 0)
 
 
 # ---------------------------------------------------------------------------
 # Cache init
 # ---------------------------------------------------------------------------
-def _routing_dims(cfg: ModelConfig, max_len: int) -> Tuple[int, int]:
-    kc = cfg.routing.num_clusters
-    cap = cfg.routing.window or max(1, max_len // kc)
-    return kc, cap
-
-
-def _slot_cache(spec, cfg: ModelConfig, B: int, max_len: int, dt):
+def _slot_cache(spec, cfg: ModelConfig, B: int, max_len: int, dt,
+                mesh=None):
     dh, Hkv = cfg.head_dim_, cfg.num_kv_heads
     if spec.kind == "ssd":
         s = ssm_mod.ssm_spec(cfg)
@@ -75,151 +67,51 @@ def _slot_cache(spec, cfg: ModelConfig, B: int, max_len: int, dt):
         M = cfg.num_image_tokens
         return {"k": jnp.zeros((B, Hkv, M, dh), dt),
                 "v": jnp.zeros((B, Hkv, M, dh), dt)}
-    # self-attention caches
-    c: Dict[str, Any] = {}
-    mode = spec.attn
-    if mode == "full":
-        c["k"] = jnp.zeros((B, Hkv, max_len, dh), dt)
-        c["v"] = jnp.zeros((B, Hkv, max_len, dh), dt)
-    elif mode in ("local", "local+routing"):
-        W = (cfg.routing.local_window if mode == "local+routing"
-             else cfg.attn_window)
-        kvl = head_split(cfg)[2] if mode == "local+routing" else Hkv
-        c["lk"] = jnp.zeros((B, kvl, 2 * W, dh), dt)
-        c["lv"] = jnp.zeros((B, kvl, 2 * W, dh), dt)
-        c["lpos"] = jnp.full((B, 2 * W), cache_reset_value("lpos"), jnp.int32)
-    if mode in ("routing", "local+routing"):
-        Hr = cfg.num_heads if mode == "routing" else head_split(cfg)[1]
-        kc, cap = _routing_dims(cfg, max_len)
-        c["rk"] = jnp.zeros((B, Hr, kc, cap, dh), dt)
-        c["rv"] = jnp.zeros((B, Hr, kc, cap, dh), dt)
-        c["rlen"] = jnp.zeros((B, Hr, kc), jnp.int32)
-    return c
+    # self-attention: the registered decode backend declares the layout
+    return attn_api.init_decode_cache(spec_for_layer(cfg, spec.attn), B,
+                                      max_len, dt, mesh=mesh)
 
 
-def init_cache(cfg: ModelConfig, B: int, max_len: int):
+def init_cache(cfg: ModelConfig, B: int, max_len: int, mesh=None):
     dt = jnp.dtype(cfg.dtype)
     segs = build_segments(cfg)
     out = []
     for pattern, G in segs:
-        slot = {str(i): _slot_cache(s, cfg, B, max_len, dt)
+        slot = {str(i): _slot_cache(s, cfg, B, max_len, dt, mesh=mesh)
                 for i, s in enumerate(pattern)}
         out.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), slot))
     return out
 
 
+def decode_backends(cfg: ModelConfig, mesh=None) -> Dict[str, str]:
+    """variant -> "variant/impl(cache_layout)" for every attention
+    variant in the stack, as resolved by the registry (engine
+    observability; also how the engine's pool layout is decided)."""
+    out: Dict[str, str] = {}
+    for pattern, _ in build_segments(cfg):
+        for s in pattern:
+            if s.kind in ("attn", "moe"):
+                b = attn_api.decode_backend(spec_for_layer(cfg, s.attn),
+                                            mesh=mesh)
+                out[s.attn] = f"{b.name}({b.caps.cache_layout})"
+    return out
+
+
 # ---------------------------------------------------------------------------
-# Decode attention primitives
+# Decode attention: one registry call per layer — the backend owns the
+# cache update semantics (append / ring / cluster pages)
 # ---------------------------------------------------------------------------
-def _decode_full(cache, q, k_new, v_new, pos):
-    """q:(B,H,1,dh) roped; k/v_new:(B,Hkv,1,dh); pos:(B,) write index."""
-    B, Hkv = k_new.shape[0], k_new.shape[1]
-    bi = jnp.arange(B)[:, None]
-    hi = jnp.arange(Hkv)[None, :]
-    ck = cache["k"].at[bi, hi, pos[:, None]].set(k_new[:, :, 0])
-    cv = cache["v"].at[bi, hi, pos[:, None]].set(v_new[:, :, 0])
-    o = full_attention(q, ck, cv, causal=True, positions=pos[:, None])
-    return o, {**cache, "k": ck, "v": cv}
-
-
-def _decode_local(cache, q, k_new, v_new, pos, window):
-    """Blocked-local decode: attend keys with kpos in blocks b-1, b."""
-    B, Hkv = k_new.shape[0], k_new.shape[1]
-    S2 = cache["lk"].shape[2]              # 2W ring
-    slot = pos % S2
-    bi = jnp.arange(B)[:, None]
-    hi = jnp.arange(Hkv)[None, :]
-    ck = cache["lk"].at[bi, hi, slot[:, None]].set(k_new[:, :, 0])
-    cv = cache["lv"].at[bi, hi, slot[:, None]].set(v_new[:, :, 0])
-    cp = cache["lpos"].at[jnp.arange(B), slot].set(pos)
-    lo = (pos // window - 1) * window      # start of block b-1
-    valid = (cp >= jnp.maximum(lo, 0)[:, None]) & (cp >= 0) & \
-            (cp <= pos[:, None])
-    o = full_attention(q, ck, cv, causal=False, pad_mask=valid)
-    return o, {**cache, "lk": ck, "lv": cv, "lpos": cp}
-
-
-def _decode_routing(cache, q, v_new, pos, cfg):
-    """Cluster-paged routing decode. q:(B,Hr,1,dh) unroped; v:(B,Hr,1,dh)."""
-    mu = cache["_mu"]                      # (Hr,kc,dh) injected by caller
-    B, Hr, _, dh = q.shape
-    kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
-    r = normalize_routing(q)[:, :, 0]      # (B,Hr,dh)
-    scores = jnp.einsum("bhd,hkd->bhk", r.astype(jnp.float32),
-                        mu.astype(jnp.float32))
-    c = jnp.argmax(scores, axis=-1)        # (B,Hr)
-    sel = c[:, :, None, None, None]
-    page_k = jnp.take_along_axis(cache["rk"], sel, axis=2)[:, :, 0]
-    page_v = jnp.take_along_axis(cache["rv"], sel, axis=2)[:, :, 0]
-    plen = jnp.take_along_axis(cache["rlen"], c[:, :, None], axis=2)[..., 0]
-    nvalid = jnp.minimum(plen, cap)        # (B,Hr)
-    logits = jnp.einsum("bhd,bhcd->bhc", r, page_k).astype(jnp.float32)
-    logits = logits / jnp.sqrt(dh)
-    slot_ok = jnp.arange(cap)[None, None, :] < nvalid[..., None]
-    logits = jnp.where(slot_ok, logits, _BIG_NEG)
-    self_logit = (jnp.einsum("bhd,bhd->bh", r, r) /
-                  jnp.sqrt(dh)).astype(jnp.float32)
-    all_logits = jnp.concatenate([logits, self_logit[..., None]], -1)
-    attn = jax.nn.softmax(all_logits, axis=-1)
-    vals = jnp.concatenate([page_v, v_new[:, :, 0][:, :, None, :]], 2)
-    o = jnp.einsum("bhc,bhcd->bhd", attn.astype(vals.dtype), vals)
-    # write r, v into the ring slot of page c
-    wslot = plen % cap
-    bi = jnp.arange(B)[:, None]
-    hi = jnp.arange(Hr)[None, :]
-    ck = cache["rk"].at[bi, hi, c, wslot].set(r.astype(cache["rk"].dtype))
-    cv = cache["rv"].at[bi, hi, c, wslot].set(
-        v_new[:, :, 0].astype(cache["rv"].dtype))
-    cl = cache["rlen"].at[bi, hi, c].set(plen + 1)
-    out = {k: v for k, v in cache.items() if k != "_mu"}
-    return o[:, :, None, :], {**out, "rk": ck, "rv": cv, "rlen": cl}
-
-
-def _decode_self_attn(p, h, cfg, mode, kmu, cache, pos):
+def _decode_self_attn(p, h, cfg, mode, kmu, cache, pos, mesh=None):
     """h: (B,1,d) -> (out (B,1,d), new_cache)."""
-    B = h.shape[0]
     q, k, v = L.qkv_project(p, h, cfg, rope=False)
-    H, Hkv = cfg.num_heads, cfg.num_kv_heads
-    g = H // Hkv
-
-    def roped(qq, kk):
-        if cfg.position != "rope":
-            return qq, kk
-        return (L.apply_rope(qq, pos[:, None], cfg.rope_theta),
-                L.apply_rope(kk, pos[:, None], cfg.rope_theta))
-
-    if mode == "full":
-        qr, kr = roped(q, k)
-        o, cache = _decode_full(cache, qr, kr, v, pos)
-    elif mode == "local":
-        qr, kr = roped(q, k)
-        o, cache = _decode_local(cache, qr, kr, v, pos, cfg.attn_window)
-    elif mode == "routing":
-        v_e = _expand_kv(v, g)
-        o, cache = _decode_routing({**cache, "_mu": kmu}, q, v_e, pos, cfg)
-    elif mode == "local+routing":
-        Hl, Hr, kvl, kvr = head_split(cfg)
-        if Hkv == 1:
-            kl, vl, vr_ = k, v, v
-        else:
-            kl, vl, vr_ = k[:, :kvl], v[:, :kvl], v[:, kvl:]
-        ql, klr = roped(q[:, :Hl], kl)
-        o_l, lc = _decode_local(
-            {"lk": cache["lk"], "lv": cache["lv"], "lpos": cache["lpos"]},
-            ql, klr, vl, pos, cfg.routing.local_window)
-        v_e = _expand_kv(vr_, Hr // vr_.shape[1])
-        rc_in = {k2: cache[k2] for k2 in ("rk", "rv", "rlen")}
-        o_r, rc = _decode_routing({**rc_in, "_mu": kmu}, q[:, Hl:], v_e,
-                                  pos, cfg)
-        o = jnp.concatenate([o_l, o_r], axis=1)
-        cache = {**lc, **rc}
-    else:
-        raise ValueError(mode)
-    return L.out_project(p, o), cache
+    out = attn_api.attend(spec_for_layer(cfg, mode), q, k, v, state=kmu,
+                          cache=cache, pos=pos, mesh=mesh)
+    return L.out_project(p, out.out), out.cache
 
 
-def _decode_layer(spec, p, kmu, cache, x, cfg, pos, image_embeds=None):
+def _decode_layer(spec, p, kmu, cache, x, cfg, pos, image_embeds=None,
+                  mesh=None):
     if spec.kind in ("attn", "moe", "cross"):
         h = L.apply_norm(p["ln1"], x, cfg.norm)
         if spec.kind == "cross":
@@ -229,7 +121,7 @@ def _decode_layer(spec, p, kmu, cache, x, cfg, pos, image_embeds=None):
             a = a * jnp.tanh(p["xgate_attn"]).astype(a.dtype)
         else:
             a, cache = _decode_self_attn(p["attn"], h, cfg, spec.attn, kmu,
-                                         cache, pos)
+                                         cache, pos, mesh=mesh)
         x = x + a
         h2 = L.apply_norm(p["ln2"], x, cfg.norm)
         if spec.kind == "moe":
@@ -262,7 +154,7 @@ def _decode_layer(spec, p, kmu, cache, x, cfg, pos, image_embeds=None):
 # ---------------------------------------------------------------------------
 # serve_step: one token for the whole stack
 # ---------------------------------------------------------------------------
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, mesh=None):
     segments = build_segments(cfg)
 
     def serve_step(params, kstate, cache, tokens, pos, active=None):
@@ -282,7 +174,8 @@ def make_serve_step(cfg: ModelConfig):
                 for i, spec in enumerate(pattern):
                     x, nc = _decode_layer(spec, p_group[i],
                                           k_group.get(str(i)),
-                                          c_group[str(i)], x, cfg, pos)
+                                          c_group[str(i)], x, cfg, pos,
+                                          mesh=mesh)
                     new_c[str(i)] = nc
                 return x, new_c
 
@@ -301,98 +194,19 @@ def make_serve_step(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
-# Prefill: forward pass that also fills the caches
+# Prefill: forward pass that also fills the caches. The fill itself is
+# cache-layout math, so the registered decode backend owns it
+# (Backend.prefill_fill via attn.prefill_cache).
 # ---------------------------------------------------------------------------
-def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions):
+def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions, mesh=None):
     """Build one layer's cache from prefix activations h (B,N,d)."""
-    B, N, _ = h.shape
     q, k, v = L.qkv_project(p["attn"], h, cfg, rope=False)
-    mode = spec.attn
-    H, Hkv = cfg.num_heads, cfg.num_kv_heads
-    g = H // Hkv
-
-    def roped_k(kk):
-        if cfg.position != "rope":
-            return kk
-        return L.apply_rope(kk, positions, cfg.rope_theta)
-
-    out = dict(cache)
-    if mode == "full":
-        kr = roped_k(k)
-        out["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], kr.astype(cache["k"].dtype), (0, 0, 0, 0))
-        out["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
-        return out
-    if mode in ("local", "local+routing"):
-        W = (cfg.routing.local_window if mode == "local+routing"
-             else cfg.attn_window)
-        kvl = head_split(cfg)[2] if mode == "local+routing" else Hkv
-        kl = roped_k(k[:, :kvl] if (mode == "local+routing" and Hkv > 1)
-                     else k)
-        vl = v[:, :kvl] if (mode == "local+routing" and Hkv > 1) else v
-        S2 = 2 * W
-        # place token t at ring slot t % S2; keep the last S2 tokens
-        take = min(N, S2)
-        tail_k = kl[:, :, -take:]
-        tail_v = vl[:, :, -take:]
-        tail_pos = positions[:, -take:]
-        slots = tail_pos % S2                              # (B,take)
-        bi = jnp.arange(B)[:, None, None]
-        hi = jnp.arange(tail_k.shape[1])[None, :, None]
-        si = slots[:, None, :]
-        out["lk"] = cache["lk"].at[bi, hi, si].set(
-            tail_k.astype(cache["lk"].dtype))
-        out["lv"] = cache["lv"].at[bi, hi, si].set(
-            tail_v.astype(cache["lv"].dtype))
-        out["lpos"] = cache["lpos"].at[jnp.arange(B)[:, None], slots].set(
-            tail_pos)
-    if mode in ("routing", "local+routing"):
-        Hr = cfg.num_heads if mode == "routing" else head_split(cfg)[1]
-        qr = q if mode == "routing" else q[:, -Hr:]
-        if mode == "routing":
-            vr = _expand_kv(v, g)
-        else:
-            kvl = head_split(cfg)[2]
-            vr_kv = v if Hkv == 1 else v[:, kvl:]
-            vr = _expand_kv(vr_kv, Hr // vr_kv.shape[1])
-        r = normalize_routing(qr)                          # (B,Hr,N,dh)
-        kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
-        scores = jnp.einsum("bhnd,hkd->bhnk", r.astype(jnp.float32),
-                            kmu.astype(jnp.float32))
-        assign = jnp.argmax(scores, -1)                    # (B,Hr,N)
-        # keep the most recent `cap` tokens per cluster
-        memb = jax.nn.one_hot(assign, kc, dtype=jnp.int32)   # (B,Hr,N,kc)
-        rank_from_end = jnp.cumsum(memb[:, :, ::-1], axis=2)[:, :, ::-1]
-        rank_from_end = (rank_from_end * memb).max(-1)     # (B,Hr,N) 1-based
-        keep = (rank_from_end >= 1) & (rank_from_end <= cap)
-        slot_of_tok = jnp.where(keep, (rank_from_end - 1), 0)
-        counts = memb.sum(2)                               # (B,Hr,kc)
-        # scatter kept tokens into pages; slot = (count - rank) % cap, the
-        # slot sequential decode would have used (ring continuity)
-        sel_cluster = assign
-        write_slot = jnp.where(
-            keep,
-            (jnp.take_along_axis(counts, sel_cluster, axis=2) % cap
-             - rank_from_end) % cap,
-            cap)                                           # cap = trash
-        bi = jnp.arange(B)[:, None, None]
-        hi = jnp.arange(Hr)[None, :, None]
-        rk_pad = jnp.concatenate(
-            [cache["rk"], jnp.zeros_like(cache["rk"][:, :, :, :1])], 3)
-        rv_pad = jnp.concatenate(
-            [cache["rv"], jnp.zeros_like(cache["rv"][:, :, :, :1])], 3)
-        rk_pad = rk_pad.at[bi, hi, sel_cluster, write_slot].set(
-            r.astype(rk_pad.dtype))
-        rv_pad = rv_pad.at[bi, hi, sel_cluster, write_slot].set(
-            vr.astype(rv_pad.dtype))
-        out["rk"] = rk_pad[:, :, :, :cap]
-        out["rv"] = rv_pad[:, :, :, :cap]
-        out["rlen"] = counts
-    return out
+    return attn_api.prefill_cache(spec_for_layer(cfg, spec.attn), cache,
+                                  q, k, v, positions=positions, state=kmu,
+                                  mesh=mesh)
 
 
-def prefill(params, kstate, cache, batch, cfg: ModelConfig):
+def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None):
     """Forward over the prefix, returning (logits, filled_cache).
 
     Runs the standard stack forward; caches are filled per layer from the
@@ -414,7 +228,8 @@ def prefill(params, kstate, cache, batch, cfg: ModelConfig):
                 if spec.kind in ("attn", "moe"):
                     h = L.apply_norm(p_i["ln1"], x, cfg.norm)
                     c_i = _fill_from_prefix(spec, cfg, c_i, h, p_i,
-                                            k_group.get(str(i)), positions)
+                                            k_group.get(str(i)), positions,
+                                            mesh=mesh)
                 elif spec.kind == "cross":
                     img = batch["image_embeds"]
                     dh, Hkv = cfg.head_dim_, cfg.num_kv_heads

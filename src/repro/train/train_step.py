@@ -72,8 +72,8 @@ def init_train_state(run: RunConfig, key: jax.Array,
                       jnp.zeros((), jnp.int32), ef)
 
 
-def make_loss_fn(run: RunConfig, impl="xla", moe_impl="einsum",
-                 constrain_fn: Optional[Callable] = None):
+def make_loss_fn(run: RunConfig, impl=None, moe_impl="einsum",
+                 constrain_fn: Optional[Callable] = None, mesh=None):
     mc, tc = run.model, run.train
 
     def loss_fn(params, kstate, batch, drop_rng):
@@ -86,7 +86,7 @@ def make_loss_fn(run: RunConfig, impl="xla", moe_impl="einsum",
         logits, new_k, aux = apply_model(
             params, kstate, inputs, mc, update_state=True, impl=impl,
             moe_impl=moe_impl, remat=tc.remat, drop_rng=drop_rng,
-            constrain_fn=constrain_fn)
+            constrain_fn=constrain_fn, mesh=mesh)
         pad = inputs.get("pad_mask")
         loss, metrics = lm_loss(logits, targets, pad, tc.z_loss, loss_mask)
         if mc.family == "moe":
@@ -174,7 +174,7 @@ def _drop_rng(run: RunConfig, step):
             if run.model.dropout > 0 else None)
 
 
-def make_train_step(run: RunConfig, impl="xla", moe_impl="einsum",
+def make_train_step(run: RunConfig, impl=None, moe_impl="einsum",
                     constrain_fn: Optional[Callable] = None,
                     grad_transform: Optional[Callable] = None,
                     grad_constrain: Optional[Callable] = None,
@@ -200,7 +200,11 @@ def make_train_step(run: RunConfig, impl="xla", moe_impl="einsum",
         return make_compressed_train_step(run, impl=impl, moe_impl=moe_impl,
                                           mesh=mesh)
     tc = run.train
-    loss_fn = make_loss_fn(run, impl, moe_impl, constrain_fn)
+    # the mesh reaches attention-backend resolution (repro.attn): a
+    # >1-device GSPMD mesh excludes supports_mesh=False kernels. The
+    # shard_map/compressed variant stays mesh-less on purpose — inside
+    # shard_map every program is single-device.
+    loss_fn = make_loss_fn(run, impl, moe_impl, constrain_fn, mesh=mesh)
     _, opt_update = make_optimizer(tc)
     schedule = make_schedule(tc, run.model.d_model)
     grad_fn = make_grad_fn(run, loss_fn, grad_constrain)
@@ -216,7 +220,7 @@ def make_train_step(run: RunConfig, impl="xla", moe_impl="einsum",
     return train_step
 
 
-def make_compressed_train_step(run: RunConfig, impl="xla",
+def make_compressed_train_step(run: RunConfig, impl=None,
                                moe_impl="einsum", mesh=None):
     """Data-parallel train step with int8 error-feedback gradient
     compression (DESIGN.md §6).

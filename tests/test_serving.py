@@ -88,10 +88,17 @@ def test_decode_routing_mechanism():
                 assert bool((totals == T).all()), totals
 
 
+def _routing_probe_spec(kc=2):
+    from repro.attn import AttentionSpec
+    return AttentionSpec(variant="routing", num_heads=1, num_kv_heads=1,
+                         head_dim=8, causal=True,
+                         routing=RoutingConfig(num_clusters=kc))
+
+
 def test_routing_decode_attends_own_cluster_only():
     """Single-layer probe: the decode step's attention output must equal a
     hand-computed softmax over (tokens in the query's argmax page + self)."""
-    from repro.serve.serving import _decode_routing
+    from repro import attn as A
     B_, Hr, dh, kc, cap = 1, 1, 8, 2, 4
     ks = jax.random.split(KEY, 4)
     rk = jnp.zeros((B_, Hr, kc, cap, dh))
@@ -105,9 +112,10 @@ def test_routing_decode_attends_own_cluster_only():
     mu = jnp.stack([keys[0, 0].mean(0), -keys[0, 0].mean(0)])[None]  # (1,2,8)
     q = jax.random.normal(ks[2], (B_, Hr, 1, dh)) * 0.1 + keys[:, :, :1]
     v_new = jax.random.normal(ks[3], (B_, Hr, 1, dh))
-    cache = {"rk": rk, "rv": rv, "rlen": rlen, "_mu": mu}
-    o, nc = _decode_routing(cache, q, v_new, jnp.array([10]),
-                            ModelConfig(**BASE))
+    cache = {"rk": rk, "rv": rv, "rlen": rlen}
+    out = A.attend(_routing_probe_spec(kc), q, None, v_new, state=mu,
+                   cache=cache, pos=jnp.array([10]))
+    o, nc = out.out, out.cache
     r = normalize_routing(q)[:, :, 0]
     logits = jnp.concatenate([
         jnp.einsum("bhd,bhcd->bhc", r, keys),
@@ -117,6 +125,69 @@ def test_routing_decode_attends_own_cluster_only():
     ref = jnp.einsum("bhc,bhcd->bhd", attn, allv)
     assert float(jnp.abs(o[:, :, 0] - ref).max()) < 1e-5
     assert int(nc["rlen"][0, 0, 0]) == 4        # appended to page 0
+
+
+def test_routing_decode_masks_unwritten_page_slots():
+    """N=1 decode vs a long partially-filled page: slots beyond rlen are
+    poisoned with huge values and must not leak into the output — the
+    page-validity mask is the routing decode's causal mask (everything in
+    a page is past; everything beyond rlen never existed)."""
+    from repro import attn as A
+    B_, Hr, dh, kc, cap = 1, 1, 8, 2, 16
+    ks = jax.random.split(KEY, 4)
+    keys = normalize_routing(jax.random.normal(ks[0], (B_, Hr, 5, dh)))
+    vals = jax.random.normal(ks[1], (B_, Hr, 5, dh))
+    rk = jnp.zeros((B_, Hr, kc, cap, dh)).at[:, :, 0, :5].set(keys)
+    rv = jnp.zeros((B_, Hr, kc, cap, dh)).at[:, :, 0, :5].set(vals)
+    # poison every slot past rlen on BOTH pages: keys that would dominate
+    # the softmax and values that would blow up the output
+    rk_p = rk.at[:, :, :, 5:].set(1e4)
+    rv_p = rv.at[:, :, :, 5:].set(1e4)
+    rlen = jnp.zeros((B_, Hr, kc), jnp.int32).at[:, :, 0].set(5)
+    mu = jnp.stack([keys[0, 0].mean(0), -keys[0, 0].mean(0)])[None]
+    q = keys[:, :, 2:3] + 0.05 * jax.random.normal(ks[2], (B_, Hr, 1, dh))
+    v_new = jax.random.normal(ks[3], (B_, Hr, 1, dh))
+    spec = _routing_probe_spec(kc)
+    pos = jnp.array([523])                      # deep into a long decode
+    clean = A.attend(spec, q, None, v_new, state=mu,
+                     cache={"rk": rk, "rv": rv, "rlen": rlen}, pos=pos)
+    poisoned = A.attend(spec, q, None, v_new, state=mu,
+                        cache={"rk": rk_p, "rv": rv_p, "rlen": rlen},
+                        pos=pos)
+    assert float(jnp.abs(clean.out - poisoned.out).max()) == 0.0
+    assert bool(jnp.isfinite(poisoned.out).all())
+
+
+def test_full_decode_positions_vs_long_cache():
+    """N=1 query at position t against a long append cache: entries the
+    cache holds at positions > t (poisoned here) are causally masked via
+    the positions plumbing, and the output matches full_attention over
+    the true prefix."""
+    from repro import attn as A
+    from repro.core.attention import full_attention
+    B_, H, dh, M, t = 2, 2, 16, 64, 37
+    ks = jax.random.split(KEY, 3)
+    k_all = jax.random.normal(ks[0], (B_, H, M, dh))
+    v_all = jax.random.normal(ks[1], (B_, H, M, dh))
+    q = jax.random.normal(ks[2], (B_, H, 1, dh))
+    spec = A.AttentionSpec(variant="full", num_heads=H, num_kv_heads=H,
+                           head_dim=dh, causal=True)   # no rope: raw parity
+    cache = A.init_decode_cache(spec, B_, M, jnp.float32)
+    # prefix < t is real; positions >= t hold junk a causal decode must
+    # never see (stale lane contents in a reused slot-pool lane)
+    cache["k"] = cache["k"].at[:, :, :t].set(k_all[:, :, :t]) \
+                           .at[:, :, t + 1:].set(1e4)
+    cache["v"] = cache["v"].at[:, :, :t].set(v_all[:, :, :t]) \
+                           .at[:, :, t + 1:].set(1e4)
+    pos = jnp.full((B_,), t, jnp.int32)
+    out = A.attend(spec, q, k_all[:, :, t:t + 1], v_all[:, :, t:t + 1],
+                   cache=cache, pos=pos)
+    ref = full_attention(q, k_all[:, :, :t + 1], v_all[:, :, :t + 1],
+                         causal=True, positions=pos[:, None])
+    assert float(jnp.abs(out.out - ref).max()) < 1e-5
+    # the new token was appended at its position
+    assert float(jnp.abs(out.cache["k"][:, :, t] - k_all[:, :, t]).max()) \
+        < 1e-6
 
 
 def test_batched_requests_different_positions():

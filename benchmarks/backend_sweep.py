@@ -84,6 +84,7 @@ def backend_sweep_rows(iters: int = 3) -> List[Row]:
             f for f, on in [("decode", caps.supports_decode),
                             ("mesh", caps.supports_mesh),
                             ("pad", caps.supports_pad_mask),
+                            ("grad", caps.supports_grad),
                             ("tpu", caps.needs_tpu)] if on)
         rows.append((f"backends/{backend.variant}:{backend.impl}", us,
                      f"tok_s={tok_s:.0f};peak_mb={peak/2**20:.1f};"

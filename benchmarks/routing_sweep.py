@@ -1,0 +1,106 @@
+"""--routing-sweep: gathered vs gather-free fused routing kernel.
+
+One row per (sequence length, impl) through the full ``routed_attention``
+module (shared-QK causal, k = sqrt-ish clusters of window 256), measuring
+tok/s of the jitted call and peak memory (XLA ``memory_analysis`` temp +
+output bytes). The same record is written to ``BENCH_routing.json`` at the
+repo root — the perf-trajectory baseline for the routing hot-spot.
+
+Interpret-mode caveat (CPU CI, this container): the Pallas rows execute
+the kernel bodies via the interpreter, where the fused kernel's in-VMEM
+row pulls cost more wall-clock than XLA's vectorized HBM gather — tok/s
+*inverts* relative to hardware. The HBM story is in ``peak_mb``: the
+fused rows drop the gathered (B,H,k,w,dh) q/k/v copies from the compiled
+buffer plan at every N. On TPU (interpret off) the same drop is the
+bandwidth win; record hardware numbers by re-running this sweep there.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import RoutingConfig
+from repro.core.kmeans import init_kmeans
+from repro.core.routing import routed_attention
+
+Row = Tuple[str, float, str]
+
+B, H, DH = 1, 2, 64
+WINDOW = 256
+SEQ_LENS = (1024, 4096, 8192)
+IMPLS = ("xla", "pallas", "pallas_fused")
+JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_routing.json"
+
+
+def _peak_bytes(compiled) -> int:
+    try:
+        m = compiled.memory_analysis()
+        return int(m.temp_size_in_bytes + m.output_size_in_bytes)
+    except Exception:                      # backend without the analysis
+        return 0
+
+
+def routing_sweep_rows(iters: int = 3,
+                       seq_lens=SEQ_LENS) -> Tuple[List[Row], dict]:
+    rows: List[Row] = []
+    record = {
+        "shape": {"B": B, "H": H, "dh": DH, "window": WINDOW},
+        "platform": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "note": ("interpret-mode wall-clock (CPU): fused in-kernel row "
+                 "pulls are interpreter-slow, so tok/s inverts vs "
+                 "hardware; the fused win is the gathered-copy drop in "
+                 "peak_mb (and HBM bandwidth on TPU)"),
+        "points": [],
+    }
+    for N in seq_lens:
+        kc = max(2, N // WINDOW)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, N, DH))
+        v = jax.random.normal(ks[1], (B, H, N, DH))
+        st = init_kmeans(ks[2], H, kc, DH)
+        cfg = RoutingConfig(num_clusters=kc)
+        point = {"N": N, "clusters": kc, "impls": {}}
+        for impl in IMPLS:
+            fn = jax.jit(lambda q, v, impl=impl: routed_attention(
+                q, None, v, st, cfg, update_state=False, impl=impl).out)
+            # one AOT compile serves both memory_analysis and timing
+            compiled = fn.lower(q, v).compile()
+            peak = _peak_bytes(compiled)
+            jax.block_until_ready(compiled(q, v))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(compiled(q, v))
+                ts.append(time.perf_counter() - t0)
+            us = float(np.median(ts) * 1e6)
+            tok_s = B * N / (us / 1e6)
+            rows.append((f"routing_sweep/N{N}:{impl}", us,
+                         f"tok_s={tok_s:.0f};peak_mb={peak / 2**20:.1f}"))
+            point["impls"][impl] = {"us_per_call": round(us, 1),
+                                    "tok_s": round(tok_s),
+                                    "peak_bytes": peak}
+        g, f = point["impls"]["pallas"], point["impls"]["pallas_fused"]
+        point["fused_speedup_tok_s"] = round(f["tok_s"] / g["tok_s"], 3)
+        point["fused_peak_ratio"] = (
+            round(f["peak_bytes"] / g["peak_bytes"], 3)
+            if g["peak_bytes"] else None)
+        record["points"].append(point)
+    return rows, record
+
+
+def write_json(record: dict, path: Path = JSON_PATH) -> None:
+    path.write_text(json.dumps(record, indent=2) + "\n")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    all_rows, record = routing_sweep_rows()
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+    write_json(record)

@@ -10,14 +10,29 @@ bits/dim, ...). TPU-projected numbers live in the roofline table
 (repro.attn registry) with tok/s + peak-memory, so backend regressions
 show up in the same report tables; ``--backend-sweep-only`` skips the
 paper tables (fast per-push trend line).
+
+``--routing-sweep`` appends the gathered-vs-fused routing kernel rows
+across N in {1k, 4k, 8k} (tok/s + memory_analysis peak) and rewrites
+``BENCH_routing.json`` at the repo root — the routing hot-spot's perf
+trajectory; ``--routing-sweep-only`` runs just that (the push-time CI
+bench job).
 """
 import sys
 
 
+FLAGS = ("--backend-sweep", "--backend-sweep-only",
+         "--routing-sweep", "--routing-sweep-only")
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    unknown = [a for a in argv if a not in FLAGS]
+    if unknown:
+        raise SystemExit(f"unknown arguments {unknown}; known: {FLAGS}")
     sweep = "--backend-sweep" in argv or "--backend-sweep-only" in argv
-    tables = "--backend-sweep-only" not in argv
+    routing = "--routing-sweep" in argv or "--routing-sweep-only" in argv
+    # any -only flag skips the paper tables; the sweeps themselves compose
+    tables = not any(a.endswith("-only") for a in argv)
     print("name,us_per_call,derived")
     if tables:
         from benchmarks.tables import ALL_TABLES
@@ -30,6 +45,13 @@ def main(argv=None) -> None:
         for name, us, derived in backend_sweep_rows():
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
+    if routing:
+        from benchmarks.routing_sweep import routing_sweep_rows, write_json
+        rows, record = routing_sweep_rows()
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        write_json(record)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ from repro.attn.registry import (Backend, BackendResolutionError,  # noqa
 from repro.attn.spec import (AttentionSpec, head_split,  # noqa: F401
                              resolve_chunk, seq_shardable, spec_for_layer,
                              specs_for_model, variant_for_layer)
+from repro.kernels.common import default_interpret as _default_interpret
 
 
 class AttnOutput(NamedTuple):
@@ -44,9 +45,37 @@ def _platform(platform: Optional[str]) -> str:
     return platform or jax.default_backend()
 
 
+def _grad_guard(out, name):
+    """Identity in the forward; the backward raises the registry error.
+
+    jax.grad can reach an attend call that never announced needs_grad
+    (eval code reused inside a loss, a forced impl on the train path).
+    Without this, differentiating a non-VJP Pallas backend dies deep in
+    tracing with an opaque missing-transpose error; with it, the failure
+    is a BackendResolutionError naming the backend and the fix.
+    """
+    @jax.custom_vjp
+    def guard(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        raise BackendResolutionError(
+            f"backend {name} is not differentiable (supports_grad=False);"
+            f" jax.grad through attn.attend needs a supports_grad backend"
+            f" — use impl='xla', a kernel with a custom VJP, or pass"
+            f" needs_grad=True to resolve one automatically")
+
+    guard.defvjp(fwd, bwd)
+    return guard(out)
+
+
 def attend(spec: AttentionSpec, q, k, v, *, state=None, positions=None,
            pad_mask=None, update_state: bool = True, cache=None, pos=None,
            mesh=None, impl: Optional[str] = None,
+           needs_grad: bool = False,
            platform: Optional[str] = None) -> AttnOutput:
     """Run the attention ``spec`` describes on q/k/v (un-roped, GQA head
     counts), through the best registered backend.
@@ -55,9 +84,14 @@ def attend(spec: AttentionSpec, q, k, v, *, state=None, positions=None,
     Decode mode (``cache`` given): q/k/v are one token (N=1), ``pos``
     (B,) is its position; returns the updated cache. ``state`` carries
     the layer's k-means centroids for routing variants in both modes.
+    ``needs_grad``: the caller will differentiate through ``out`` (train
+    paths announce this); resolution then excludes — or, forced, loudly
+    refuses — backends without a VJP. Even without the announcement, a
+    non-differentiable backend's output is guarded so jax.grad raises a
+    clear BackendResolutionError instead of an opaque tracing failure.
     """
     plat = _platform(platform)
-    interpret = plat != "tpu"
+    interpret = _default_interpret(None, plat)
     if cache is not None:
         if pad_mask is not None:
             # decode validity lives in the cache (ring positions, page
@@ -74,12 +108,14 @@ def attend(spec: AttentionSpec, q, k, v, *, state=None, positions=None,
         return AttnOutput(out=out, state=state, cache=new_cache)
     backend = resolve(spec, padded=pad_mask is not None,
                       positioned=positions is not None,
-                      seq_len=q.shape[2], mesh=mesh, impl=impl,
-                      platform=plat)
+                      needs_grad=needs_grad, seq_len=q.shape[2],
+                      mesh=mesh, impl=impl, platform=plat)
     out, new_state = backend.apply(spec, q, k, v, state=state,
                                    positions=positions, pad_mask=pad_mask,
                                    update_state=update_state,
                                    interpret=interpret)
+    if not backend.caps.supports_grad:
+        out = _grad_guard(out, backend.name)
     return AttnOutput(out=out, state=new_state)
 
 

@@ -12,8 +12,19 @@ Registered pairs (variant, impl):
                      cluster-paged decode
   routing/pallas     gathered-block attention on the Pallas kernel
                      (core.routing impl="pallas")
+  routing/pallas_fused   gather-free fused kernel: sequence-layout q/k/v,
+                     membership via scalar prefetch — no (B,H,k,w,dh)
+                     q/k/v intermediates in HBM (DESIGN.md §9); preferred
+                     over routing/pallas on TPU (priority 20 vs 10)
   local+routing/xla      paper head split, both halves reference
   local+routing/pallas   local half reference, routing blocks on Pallas
+  local+routing/pallas_fused  local half reference, routing half fused
+
+Every Pallas backend is differentiable (the kernels carry flash-style
+custom VJPs), so ``impl="pallas"``/``"pallas_fused"`` are legal on the
+train path; decode stays on the xla backends (the fused kernel has no
+single-token path — serving's cluster-paged routing decode is unchanged
+and keeps resolving to routing/xla).
 
 Rope is applied *here*, per variant: full/local heads are roped, routing
 heads are not (their routing vectors and shared-QK attention keys are
@@ -94,7 +105,7 @@ def _routing_subspec(spec: AttentionSpec) -> AttentionSpec:
 # Apply (train / prefill) paths
 # ---------------------------------------------------------------------------
 def _full_xla_apply(spec, q, k, v, *, state=None, positions=None,
-                    pad_mask=None, update_state=True, interpret=True):
+                    pad_mask=None, update_state=True, interpret=None):
     qr, kr = _rope_qk(spec, q, k, positions)
     o = full_attention(qr, kr, v, spec.causal, pad_mask,
                        positions=positions,
@@ -112,7 +123,7 @@ def _block_size(n: int, pref: int = 128) -> int:
 
 
 def _full_pallas_apply(spec, q, k, v, *, state=None, positions=None,
-                       pad_mask=None, update_state=True, interpret=True):
+                       pad_mask=None, update_state=True, interpret=None):
     from repro.kernels import ops as kops
     qr, kr = _rope_qk(spec, q, k, positions)
     o = kops.flash_attention(qr, kr, v, causal=spec.causal,
@@ -123,14 +134,14 @@ def _full_pallas_apply(spec, q, k, v, *, state=None, positions=None,
 
 
 def _local_xla_apply(spec, q, k, v, *, state=None, positions=None,
-                     pad_mask=None, update_state=True, interpret=True):
+                     pad_mask=None, update_state=True, interpret=None):
     qr, kr = _rope_qk(spec, q, k, positions)
     o = local_attention(qr, kr, v, spec.window, spec.causal, pad_mask)
     return o, state
 
 
 def _local_pallas_apply(spec, q, k, v, *, state=None, positions=None,
-                        pad_mask=None, update_state=True, interpret=True):
+                        pad_mask=None, update_state=True, interpret=None):
     from repro.kernels import ops as kops
     qr, kr = _rope_qk(spec, q, k, positions)
     o = kops.local_attention(qr, kr, v, window=min(spec.window, q.shape[2]),
@@ -140,7 +151,7 @@ def _local_pallas_apply(spec, q, k, v, *, state=None, positions=None,
 
 def _make_routing_apply(kernel_impl: str):
     def apply(spec, q, k, v, *, state=None, positions=None, pad_mask=None,
-              update_state=True, interpret=True):
+              update_state=True, interpret=None):
         rc = spec.routing
         g = spec.q_per_kv
         v_e = _expand_kv(v, g)
@@ -157,7 +168,7 @@ def _make_mixed_apply(kernel_impl: str):
     routing_apply = _make_routing_apply(kernel_impl)
 
     def apply(spec, q, k, v, *, state=None, positions=None, pad_mask=None,
-              update_state=True, interpret=True):
+              update_state=True, interpret=None):
         (ql, kl, vl), (qr, kr, vr) = _split_heads(spec, q, k, v)
         o_l, _ = _local_xla_apply(
             _local_subspec(spec), ql, kl, vl, positions=positions,
@@ -210,7 +221,7 @@ def _mixed_cache(spec, B, max_len, dtype):
             **_pages_cache(spec, B, max_len, dtype)}
 
 
-def _full_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
+def _full_decode(spec, q, k, v, *, cache, pos, state=None, interpret=None):
     """Append k/v at ``pos`` and attend the whole cache, causal on
     original positions (the N=1-query-vs-long-cache path)."""
     qr, kr = _rope_qk(spec, q, k, pos[:, None])
@@ -226,7 +237,7 @@ def _full_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
     return o, {**cache, "k": ck, "v": cv}
 
 
-def _local_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
+def _local_decode(spec, q, k, v, *, cache, pos, state=None, interpret=None):
     """Blocked-local decode over the 2W ring: attend keys whose stored
     absolute position lies in blocks b-1, b of the query position."""
     qr, kr = _rope_qk(spec, q, k, pos[:, None])
@@ -250,7 +261,7 @@ def _local_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
 
 
 def _routing_decode(spec, q, k, v, *, cache, pos, state=None,
-                    interpret=True):
+                    interpret=None):
     """Cluster-paged routing decode: the token routes to its argmax
     centroid and attends only that page (+ itself). ``state`` is the
     layer's centroid tree mu (Hr, kc, dh); q/v arrive un-roped with Hkv
@@ -289,7 +300,7 @@ def _routing_decode(spec, q, k, v, *, cache, pos, state=None,
     return o[:, :, None, :], {**cache, "rk": ck, "rv": cv, "rlen": cl}
 
 
-def _mixed_decode(spec, q, k, v, *, cache, pos, state=None, interpret=True):
+def _mixed_decode(spec, q, k, v, *, cache, pos, state=None, interpret=None):
     (ql, kl, vl), (qr, _, vr) = _split_heads(spec, q, k, v)
     ring = {n: cache[n] for n in ("lk", "lv", "lpos")}
     o_l, ring = _local_decode(_local_subspec(spec), ql, kl, vl,
@@ -399,7 +410,7 @@ registry.register(Backend(
     cache_head_axes={"k": 2, "v": 2},
     caps=Capabilities(supports_decode=True, supports_mesh=True,
                       supports_pad_mask=True, supports_logit_scale=True,
-                      cache_layout="append")))
+                      supports_grad=True, cache_layout="append")))
 
 # supports_positions=False: the flash kernel masks causality by row
 # index — the positions-aware reference must serve packed/offset calls
@@ -407,42 +418,75 @@ registry.register(Backend(
     variant="full", impl="pallas", apply=_full_pallas_apply, priority=10,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
                       supports_pad_mask=False, supports_positions=False,
-                      needs_tpu=True)))
+                      supports_grad=True, needs_tpu=True)))
 
 registry.register(Backend(
     variant="local", impl="xla", apply=_local_xla_apply,
     decode=_local_decode, init_cache=_ring_cache, prefill_fill=_ring_fill,
     cache_head_axes=_RING_AXES, cache_fill=_RING_FILLS,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
-                      supports_pad_mask=True, cache_layout="ring")))
+                      supports_pad_mask=True, supports_grad=True,
+                      cache_layout="ring")))
 
 registry.register(Backend(
     variant="local", impl="pallas", apply=_local_pallas_apply, priority=10,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
-                      supports_pad_mask=False, needs_tpu=True)))
+                      supports_pad_mask=False, supports_grad=True,
+                      needs_tpu=True)))
 
 registry.register(Backend(
     variant="routing", impl="xla", apply=_make_routing_apply("xla"),
     decode=_routing_decode, init_cache=_pages_cache,
     prefill_fill=_pages_fill, cache_head_axes=_PAGE_AXES,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
-                      supports_pad_mask=True, cache_layout="pages")))
+                      supports_pad_mask=True, supports_grad=True,
+                      cache_layout="pages")))
 
 registry.register(Backend(
     variant="routing", impl="pallas", apply=_make_routing_apply("pallas"),
     priority=10,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
-                      supports_pad_mask=True, needs_tpu=True)))
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True)))
+
+# gather-free fused kernel: highest priority, so TPU auto-selection takes
+# it over the gathered pallas path; supports_grad via its custom VJP.
+# supports_mesh=False like every Pallas backend: a GSPMD mesh call falls
+# back to the reference; the shard_map train path (per-device programs,
+# no mesh at attend) runs the kernel in distributed training (§9).
+# max_seq_elems: the kernel keeps the full (N,dh) q/k/v sequence planes
+# VMEM-resident (DESIGN.md §9: 3·N·dh·4B per plane set; N·dh = 1M fp32
+# is ~12 MiB of v5e's ~16 MiB — N=8k at dh=128, N=4k at dh=256). Beyond
+# the budget, auto-selection falls back to the per-tile gathered kernel
+# instead of failing Mosaic compilation on VMEM overflow; the cap is
+# per-(seq_len · head_dim), so wide heads shrink the legal N.
+_FUSED_MAX_ELEMS = 8192 * 128
+
+registry.register(Backend(
+    variant="routing", impl="pallas_fused",
+    apply=_make_routing_apply("pallas_fused"), priority=20,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
 
 registry.register(Backend(
     variant="local+routing", impl="xla", apply=_make_mixed_apply("xla"),
     decode=_mixed_decode, init_cache=_mixed_cache, prefill_fill=_mixed_fill,
     cache_head_axes={**_RING_AXES, **_PAGE_AXES}, cache_fill=_RING_FILLS,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
-                      supports_pad_mask=True, cache_layout="ring+pages")))
+                      supports_pad_mask=True, supports_grad=True,
+                      cache_layout="ring+pages")))
 
 registry.register(Backend(
     variant="local+routing", impl="pallas",
     apply=_make_mixed_apply("pallas"), priority=10,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
-                      supports_pad_mask=True, needs_tpu=True)))
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True)))
+
+registry.register(Backend(
+    variant="local+routing", impl="pallas_fused",
+    apply=_make_mixed_apply("pallas_fused"), priority=20,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))

@@ -44,6 +44,19 @@ class Capabilities:
     ``supports_logit_scale``: the backend honors
     ``AttentionSpec.logit_scale``; backends with a baked 1/sqrt(dh)
     scale declare False and are excluded for specs that override it.
+    ``supports_grad``: the apply path is differentiable (XLA math, or a
+    kernel with a custom VJP). Deliberately defaults to False — a new
+    kernel backend must *claim* differentiability (and then pass the
+    grad leg of the registry parity matrix), it cannot inherit it.
+    Backends at False are excluded from calls that announce
+    ``needs_grad`` and — because jax.grad can reach a call that didn't
+    announce it — their outputs are wrapped in a guard whose backward
+    raises this registry's error instead of an opaque Pallas trace
+    failure (see ``attn.attend``).
+    ``max_seq_elems``: cap on seq_len · head_dim — for kernels whose
+    working set scales with the (N, dh) plane (the fused routing kernel
+    keeps q/k/v sequence planes VMEM-resident), where a seq-only cap
+    would be wrong for wide heads.
     """
 
     supports_decode: bool = False
@@ -51,8 +64,10 @@ class Capabilities:
     supports_pad_mask: bool = True
     supports_positions: bool = True
     supports_logit_scale: bool = False
+    supports_grad: bool = False
     needs_tpu: bool = False
     max_seq: Optional[int] = None
+    max_seq_elems: Optional[int] = None
     cache_layout: str = ""          # "", "append", "ring", "pages", ...
 
 
@@ -163,14 +178,18 @@ def cache_fill_values() -> Dict[str, int]:
 
 
 def _gaps(b: Backend, *, decode: bool, padded: bool,
-          positioned: bool, scaled: bool, seq_len: Optional[int],
-          mesh_devices: int, platform: str, forced: bool) -> List[str]:
+          positioned: bool, scaled: bool, needs_grad: bool,
+          seq_len: Optional[int], head_dim: int, mesh_devices: int,
+          platform: str, forced: bool) -> List[str]:
     """Capability gaps of ``b`` for this call. ``needs_tpu`` only counts
     against auto-selection (forced backends fall back to interpret)."""
     gaps = []
     if decode and not b.caps.supports_decode:
         gaps.append("call needs a decode path (cache given) but "
                     "supports_decode=False")
+    if needs_grad and not b.caps.supports_grad:
+        gaps.append("call is differentiated (needs_grad=True) but the "
+                    "backend has no VJP (supports_grad=False)")
     if padded and not b.caps.supports_pad_mask:
         gaps.append("call has a pad_mask but supports_pad_mask=False")
     if positioned and not b.caps.supports_positions:
@@ -186,6 +205,12 @@ def _gaps(b: Backend, *, decode: bool, padded: bool,
     if (seq_len is not None and b.caps.max_seq is not None
             and seq_len > b.caps.max_seq):
         gaps.append(f"seq_len {seq_len} exceeds max_seq {b.caps.max_seq}")
+    if (seq_len is not None and b.caps.max_seq_elems is not None
+            and seq_len * head_dim > b.caps.max_seq_elems):
+        gaps.append(
+            f"seq_len x head_dim {seq_len}x{head_dim} exceeds "
+            f"max_seq_elems {b.caps.max_seq_elems} (the backend's "
+            f"resident-plane budget)")
     if not forced and b.caps.needs_tpu and platform != "tpu":
         gaps.append(f"needs_tpu on platform {platform!r}")
     return gaps
@@ -193,18 +218,24 @@ def _gaps(b: Backend, *, decode: bool, padded: bool,
 
 def resolve(spec: AttentionSpec, *, decode: bool = False,
             padded: bool = False, positioned: bool = False,
-            seq_len: Optional[int] = None, mesh=None,
-            impl: Optional[str] = None, platform: str = "cpu") -> Backend:
+            needs_grad: bool = False, seq_len: Optional[int] = None,
+            mesh=None, impl: Optional[str] = None,
+            platform: str = "cpu") -> Backend:
     """Pick the backend for this call, or raise loudly.
 
     ``impl``: explicit override — capability mismatches are errors, not
     silent fallbacks. Without it: best (highest-priority) registered
     backend whose capabilities cover the call on ``platform``.
+    ``needs_grad``: the caller will differentiate through the result
+    (train paths announce this) — non-differentiable backends are
+    excluded / refused.
     """
     mesh_devices = getattr(mesh, "size", 1) if mesh is not None else 1
     gap_kw = dict(decode=decode, padded=padded, positioned=positioned,
+                  needs_grad=needs_grad,
                   scaled=spec.logit_scale is not None, seq_len=seq_len,
-                  mesh_devices=mesh_devices, platform=platform)
+                  head_dim=spec.head_dim, mesh_devices=mesh_devices,
+                  platform=platform)
     if impl is not None:
         b = get(spec.variant, impl)
         gaps = _gaps(b, forced=True, **gap_kw)

@@ -15,9 +15,14 @@ Pipeline (per head):
 Complexity: O(nkd) for step 2 + O(k w^2 d) = O(n^2 d / k) for step 4;
 k = sqrt(n) gives the paper's O(n^1.5 d).
 
-The O(k w^2 d) attention (step 4) is the compute hot-spot and has a Pallas
-TPU kernel (`repro.kernels.routing_attention`); this module is the pure-JAX
-reference and the default on CPU. `impl="pallas"` switches to the kernel.
+The O(k w^2 d) attention (step 4) is the compute hot-spot and has two
+Pallas TPU kernels (`repro.kernels.routing_attention`); this module is the
+pure-JAX reference and the default on CPU. `impl="pallas"` runs the
+*gathered* kernel (XLA materializes the (B,H,k,w,dh) blocks, the kernel
+streams them); `impl="pallas_fused"` runs the *gather-free* kernel: q/k/v
+stay in sequence layout, the membership indices ride in via scalar
+prefetch, and steps 4's gathers never touch HBM (DESIGN.md §9). Both
+kernel paths are differentiable (custom flash-style VJPs).
 """
 from __future__ import annotations
 
@@ -97,7 +102,7 @@ def routed_attention(q: jax.Array,
                      update_state: bool = True,
                      return_attn: bool = False,
                      impl: str = "xla",
-                     interpret: bool = True) -> RoutingOutput:
+                     interpret: Optional[bool] = None) -> RoutingOutput:
     """Content-routed sparse attention.
 
     q, v: (B, H, N, dh); k: same or None (shared-QK causal mode).
@@ -106,7 +111,11 @@ def routed_attention(q: jax.Array,
         blocks order-correct.
     pad_mask: (B, N) bool, True = real token. Padding is excluded from
         top-k selection, attention, and centroid updates (paper Section 4.1).
-    interpret: Pallas interpret mode for impl="pallas" (True off-TPU).
+    impl: "xla" reference | "pallas" gathered kernel | "pallas_fused"
+        gather-free kernel (sequence-layout q/k/v, scalar-prefetch
+        membership — no (B,H,k,w,dh) q/k/v intermediates in HBM).
+    interpret: Pallas interpret mode for the kernel impls; None derives
+        from the platform (compiled on TPU, interpret elsewhere).
     """
     B, H, N, dh = q.shape
     if positions is None:
@@ -141,9 +150,10 @@ def routed_attention(q: jax.Array,
         return RoutingOutput(out=o, state=out.state)
 
     w = min(cfg.window or max(1, N // cfg.num_clusters), N)
+    shared = cfg.share_qk and cfg.causal
 
     r_q = normalize_routing(q)
-    if cfg.share_qk and cfg.causal:
+    if shared:
         r_k, k_attn = r_q, r_q
     else:
         r_k = normalize_routing(k if k is not None else q)
@@ -151,45 +161,57 @@ def routed_attention(q: jax.Array,
 
     scores_q = cluster_scores(r_q, state.mu)             # (B,H,N,k)
     q_idx = balanced_topk(scores_q, w, pad_mask)         # (B,H,k,w)
-    if cfg.share_qk and cfg.causal:
+    if shared:
         k_idx = q_idx
     else:
         scores_k = cluster_scores(r_k, state.mu)
         k_idx = balanced_topk(scores_k, w, pad_mask)
 
-    qg = _gather_rows(r_q, q_idx)                        # (B,H,k,w,dh)
-    kg = _gather_rows(k_attn, k_idx)
-    vg = _gather_rows(v, k_idx)
-    pos = positions[:, None, :].astype(jnp.int32)
-    pos_q = jnp.take_along_axis(
-        jnp.broadcast_to(pos, (B, H, N)), q_idx.reshape(B, H, -1), axis=2
-    ).reshape(B, H, q_idx.shape[2], w)
-    pos_k = jnp.take_along_axis(
-        jnp.broadcast_to(pos, (B, H, N)), k_idx.reshape(B, H, -1), axis=2
-    ).reshape(B, H, k_idx.shape[2], w)
-
-    valid_k = None
-    if pad_mask is not None:
-        vm = jnp.broadcast_to(pad_mask[:, None, :], (B, H, N))
-        valid_k = jnp.take_along_axis(
-            vm, k_idx.reshape(B, H, -1), axis=2).reshape(pos_k.shape)
-
-    if impl == "pallas":
+    if impl == "pallas_fused":
+        # gather-free: q/k/v stay in sequence layout; the kernel pulls
+        # member rows through the scalar-prefetched indices and the mask
+        # reads the (B,N) position/validity arrays directly
         from repro.kernels import ops as kops
-        og = kops.routed_attention_blocks(
-            qg, kg, vg, pos_q, pos_k, causal=cfg.causal, valid_k=valid_k,
-            interpret=interpret)
+        og = kops.routed_attention_fused(
+            r_q, None if shared else k_attn, v, q_idx, k_idx,
+            positions.astype(jnp.int32), causal=cfg.causal,
+            kvalid=pad_mask, interpret=interpret)
         attn = None
     else:
-        og, attn = _block_attention(qg, kg, vg, pos_q, pos_k, cfg.causal,
-                                    valid_k, return_attn)
+        qg = _gather_rows(r_q, q_idx)                    # (B,H,k,w,dh)
+        # shared-QK causal: k_attn is r_q and k_idx is q_idx, so the key
+        # gather is identical to the query gather — reuse it
+        kg = qg if shared else _gather_rows(k_attn, k_idx)
+        vg = _gather_rows(v, k_idx)
+        pos = positions[:, None, :].astype(jnp.int32)
+        pos_q = jnp.take_along_axis(
+            jnp.broadcast_to(pos, (B, H, N)), q_idx.reshape(B, H, -1),
+            axis=2).reshape(B, H, q_idx.shape[2], w)
+        pos_k = pos_q if shared else jnp.take_along_axis(
+            jnp.broadcast_to(pos, (B, H, N)), k_idx.reshape(B, H, -1),
+            axis=2).reshape(B, H, k_idx.shape[2], w)
+
+        valid_k = None
+        if pad_mask is not None:
+            vm = jnp.broadcast_to(pad_mask[:, None, :], (B, H, N))
+            valid_k = jnp.take_along_axis(
+                vm, k_idx.reshape(B, H, -1), axis=2).reshape(pos_k.shape)
+
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            og = kops.routed_attention_blocks(
+                qg, kg, vg, pos_q, pos_k, causal=cfg.causal,
+                valid_k=valid_k, interpret=interpret)
+            attn = None
+        else:
+            og, attn = _block_attention(qg, kg, vg, pos_q, pos_k,
+                                        cfg.causal, valid_k, return_attn)
 
     out = _scatter_rows(og, q_idx, N, cfg.scatter_mode)
     new_state = state
     if update_state:
         new_state = ema_update(
-            state, r_q, None if (cfg.share_qk and cfg.causal) else r_k,
-            pad_mask, cfg.decay)
+            state, r_q, None if shared else r_k, pad_mask, cfg.decay)
     return RoutingOutput(out=out, state=new_state,
                          attn=attn if return_attn else None,
                          q_idx=q_idx if return_attn else None)

@@ -1,0 +1,42 @@
+"""Shared plumbing for the Pallas kernels.
+
+Two things every kernel file needs:
+
+* ``default_interpret``: the platform-derived Pallas interpret default.
+  Kernels compile with Mosaic only on TPU; everywhere else (CPU CI, the
+  dev container) they run in interpret mode with identical semantics.
+  Callers that pass ``interpret=None`` get the derived default, so a
+  call site that forgets ``interpret=False`` on TPU cannot silently
+  benchmark interpret mode (and a CPU caller cannot crash into Mosaic).
+* ``float0_like``: custom-VJP cotangents for integer operands (membership
+  indices, positions). jax requires ``float0`` for int-dtype primals.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+NEG = -1e9
+
+
+def default_interpret(interpret: Optional[bool] = None,
+                      platform: Optional[str] = None) -> bool:
+    """Resolve an ``interpret`` argument: None derives from the platform
+    (compiled on TPU, interpret elsewhere); an explicit bool wins.
+    ``platform`` overrides the detected backend (attn.attend passes the
+    platform it resolved backends against) — this function is the single
+    source of the rule."""
+    if interpret is None:
+        return (platform or jax.default_backend()) != "tpu"
+    return bool(interpret)
+
+
+def float0_like(x):
+    """Zero cotangent for an integer-dtype primal (custom_vjp bwd)."""
+    return np.zeros(np.shape(x), jax.dtypes.float0)

@@ -1,8 +1,15 @@
 """jit'd public wrappers for the Pallas kernels.
 
-`interpret` defaults to True (this container is CPU; the kernel bodies then
-execute in Python with identical semantics). On TPU pass interpret=False —
-the call sites (core/routing.py `impl="pallas"`, models) only toggle a flag.
+``interpret=None`` (the default) derives from the platform: compiled
+Mosaic on TPU, interpret mode everywhere else (kernels/common.py
+``default_interpret``). A caller that forgets ``interpret=False`` on TPU
+therefore cannot silently benchmark interpret mode, and a CPU caller
+cannot crash into the Mosaic compiler. Explicit True/False still wins.
+
+All wrappers are differentiable: the kernels carry flash-style
+``jax.custom_vjp`` backwards (recompute-from-lse), so ``jax.grad``
+through any of them runs Pallas end-to-end instead of falling back to
+the XLA reference.
 """
 from __future__ import annotations
 
@@ -17,13 +24,13 @@ from repro.kernels import routing_attention as _routing
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
-def flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=True):
+def flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=None):
     return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                   interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
-def local_attention(q, k, v, window, causal=True, interpret=True):
+def local_attention(q, k, v, window, causal=True, interpret=None):
     return _local.local_attention_kernel(q, k, v, window, causal=causal,
                                          interpret=interpret)
 
@@ -31,7 +38,19 @@ def local_attention(q, k, v, window, causal=True, interpret=True):
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
-                            valid_k=None, bq=128, bk=128, interpret=True):
+                            valid_k=None, bq=128, bk=128, interpret=None):
     return _routing.routed_attention_blocks(
         qg, kg, vg, pos_q, pos_k, causal=causal, valid_k=valid_k,
+        bq=bq, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
+                           kvalid=None, bq=128, bk=128, interpret=None):
+    """Gather-free fused kernel: sequence-layout q/k/v (k=None reads keys
+    from the q buffer — shared-QK causal mode) + (B,H,k,w) membership via
+    scalar prefetch. Returns per-cluster blocks (B,H,k,w,dh)."""
+    return _routing.routed_attention_fused(
+        q, k, v, q_idx, k_idx, positions, causal=causal, kvalid=kvalid,
         bq=bq, bk=bk, interpret=interpret)

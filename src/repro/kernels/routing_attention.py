@@ -1,18 +1,35 @@
-"""Routed (intra-cluster) attention — Pallas TPU kernel. THE paper hot-spot.
+"""Routed (intra-cluster) attention — Pallas TPU kernels. THE paper hot-spot.
 
-Stage 2 of the two-stage TPU adaptation (DESIGN.md §3): assignment/top-k/
-gather stay in XLA; this kernel computes the O(k·w²·d) attention over the
-*gathered* cluster blocks with flash-style streaming, so no (w x w) matrix
-ever reaches HBM.
+Two kernels implement stage 2 of the TPU adaptation (DESIGN.md §3, §9):
 
-Inputs are the gathered blocks (B,H,k,w,dh) plus the original sequence
-positions of every gathered row. The causal mask compares those gathered
-positions (pos_q >= pos_k) — this is what makes cluster blocks order-correct
-— and invalid (padding) keys are encoded by the caller as pos_k = _SENTINEL,
-which the same comparison masks out for free.
+``routed_attention_blocks`` — the original *gathered* kernel: XLA
+materializes (B,H,k,w,dh) copies of q/k/v (three HBM round-trips of the
+whole sequence, four in shared-QK mode before the dedupe) and the kernel
+streams the cluster blocks with flash-style online softmax.
 
-Grid: (B·H·k clusters, w/bq, w/bk) with the KV axis sequential; (m, l, acc)
-scratch in VMEM. MXU-aligned: bq = bk = 128 default, dh in {64, 128, 256}.
+``routed_attention_fused`` — the *gather-free* kernel: q/k/v stay in
+sequence layout (B,H,N,dh); the (B,H,k,w) membership indices ride in as
+scalar-prefetch operands (``PrefetchScalarGridSpec``, SMEM), the per-
+(batch·head) sequence plane is the kernel's input block, and each grid
+step pulls exactly the bq/bk member rows it needs from VMEM — the same
+page-table trick TPU paged attention uses, at row granularity. No gathered
+(B,H,k,w,dh) q/k/v tensor ever reaches HBM, and shared-QK causal mode
+reads keys from the q plane (one VMEM-resident buffer instead of two).
+Positions are read from the (B,N) sequence-level arrays through the same
+indices, so the causal mask still compares original positions
+(pos_q >= pos_k) and padded keys arrive pre-encoded as pos = SENTINEL.
+
+Both kernels are differentiable (``jax.custom_vjp``): the forward emits
+per-row lse stats (m + log l); the backward recomputes p = exp(s - lse)
+tile by tile — no (w x w) matrix is ever stored — and runs a dq kernel
+(KV-sequential grid) plus a dk/dv kernel (Q-sequential grid) over the same
+cluster-block structure. The fused backward produces per-cluster gradient
+blocks and scatter-adds them to sequence layout in XLA (duplicate
+memberships accumulate, exactly the transpose of the implicit gather).
+
+Grid: (B·H·k clusters, w/bq, w/bk) gathered; (B·H, k, w/bq, w/bk) fused,
+KV axis sequential; (m, l, acc) scratch in VMEM. MXU-aligned: bq = bk =
+128 default, dh in {64, 128, 256}.
 """
 from __future__ import annotations
 
@@ -23,14 +40,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from repro.kernels.common import NEG as _NEG
+from repro.kernels.common import CompilerParams as _CompilerParams
+from repro.kernels.common import default_interpret, float0_like
 
-_NEG = -1e9
 SENTINEL = 2 ** 30          # python int: usable inside the kernel body
 
 
-def _kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref,
+def _keep_mask(pq, pk, causal):
+    """Attendable (q row, k row) pairs. Padded keys carry pos = SENTINEL,
+    which the causal comparison masks for free; the non-causal branch
+    checks the sentinel explicitly."""
+    if causal:
+        return pq[:, None] >= pk[None, :]
+    return jnp.broadcast_to((pk < SENTINEL)[None, :],
+                            (pq.shape[0], pk.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Gathered kernel (blocks already materialized by XLA)
+# ---------------------------------------------------------------------------
+def _kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref, lse_ref,
             m_ref, l_ref, acc_ref, *, causal, scale):
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -47,10 +77,7 @@ def _kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref,
     pq = pq_ref[0]                                    # (bq,) int32
     pk = pk_ref[0]                                    # (bk,) int32
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-    if causal:
-        keep = pq[:, None] >= pk[None, :]
-    else:
-        keep = (pk < SENTINEL)[None, :] & jnp.ones_like(s, bool)
+    keep = _keep_mask(pq, pk, causal)
     s = jnp.where(keep, s, _NEG)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(-1))
@@ -65,12 +92,191 @@ def _kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref,
     def _done():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_ref[...] + jnp.log(l)
+
+
+def _g_dq_kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, do_ref, lse_ref,
+                 dsum_ref, dq_ref, dq_acc, *, causal, scale):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    keep = _keep_mask(pq_ref[0], pk_ref[0], causal)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    p = jnp.where(keep, jnp.exp(s - lse_ref[0][:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum_ref[0][:, None]) * scale
+    dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        dq_ref[0] = dq_acc[...]
+
+
+def _g_dkv_kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, do_ref, lse_ref,
+                  dsum_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, causal,
+                  scale):
+    iq = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    keep = _keep_mask(pq_ref[0], pk_ref[0], causal)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    p = jnp.where(keep, jnp.exp(s - lse_ref[0][:, None]), 0.0)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum_ref[0][:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(iq == nq - 1)
+    def _done():
+        dk_ref[0] = dk_acc[...]
+        dv_ref[0] = dv_acc[...]
+
+
+def _g_fwd_call(qf, kf, vf, pqf, pkf, causal, bq, bk, interpret):
+    n, w, dh = qf.shape
+    grid = (n, w // bq, w // bk)
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, scale=1.0 / (dh ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda c, iq, ik: (c, iq, 0)),
+            pl.BlockSpec((1, bk, dh), lambda c, iq, ik: (c, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda c, iq, ik: (c, ik, 0)),
+            pl.BlockSpec((1, bq), lambda c, iq, ik: (c, iq)),
+            pl.BlockSpec((1, bk), lambda c, iq, ik: (c, ik)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh), lambda c, iq, ik: (c, iq, 0)),
+            pl.BlockSpec((1, bq), lambda c, iq, ik: (c, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, w, dh), qf.dtype),
+            jax.ShapeDtypeStruct((n, w), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf, pqf, pkf)
+    return out, lse
+
+
+def _g_bwd_call(qf, kf, vf, pqf, pkf, out, lse, do, causal, bq, bk,
+                interpret):
+    n, w, dh = qf.shape
+    dsum = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    scale = 1.0 / (dh ** 0.5)
+    params = _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    q_at = lambda c, iq, ik: (c, iq, 0)
+    k_at = lambda c, iq, ik: (c, ik, 0)
+    rq_at = lambda c, iq, ik: (c, iq)
+    rk_at = lambda c, iq, ik: (c, ik)
+    dq = pl.pallas_call(
+        functools.partial(_g_dq_kernel, causal=causal, scale=scale),
+        grid=(n, w // bq, w // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_at),
+            pl.BlockSpec((1, bk, dh), k_at),
+            pl.BlockSpec((1, bk, dh), k_at),
+            pl.BlockSpec((1, bq), rq_at),
+            pl.BlockSpec((1, bk), rk_at),
+            pl.BlockSpec((1, bq, dh), q_at),
+            pl.BlockSpec((1, bq), rq_at),
+            pl.BlockSpec((1, bq), rq_at),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_at),
+        out_shape=jax.ShapeDtypeStruct((n, w, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(qf, kf, vf, pqf, pkf, do, lse, dsum)
+
+    # swapped grid: key tile parallel, query sweep sequential
+    q_at2 = lambda c, ik, iq: (c, iq, 0)
+    k_at2 = lambda c, ik, iq: (c, ik, 0)
+    rq_at2 = lambda c, ik, iq: (c, iq)
+    rk_at2 = lambda c, ik, iq: (c, ik)
+    dk, dv = pl.pallas_call(
+        functools.partial(_g_dkv_kernel, causal=causal, scale=scale),
+        grid=(n, w // bk, w // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_at2),
+            pl.BlockSpec((1, bk, dh), k_at2),
+            pl.BlockSpec((1, bk, dh), k_at2),
+            pl.BlockSpec((1, bq), rq_at2),
+            pl.BlockSpec((1, bk), rk_at2),
+            pl.BlockSpec((1, bq, dh), q_at2),
+            pl.BlockSpec((1, bq), rq_at2),
+            pl.BlockSpec((1, bq), rq_at2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, dh), k_at2),
+            pl.BlockSpec((1, bk, dh), k_at2),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, w, dh), jnp.float32),
+            jax.ShapeDtypeStruct((n, w, dh), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+        ],
+        compiler_params=params,
+        interpret=interpret,
+    )(qf, kf, vf, pqf, pkf, do, lse, dsum)
+    return (dq.astype(qf.dtype), dk.astype(kf.dtype), dv.astype(vf.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _routed_gathered(causal, bq, bk, interpret, qf, kf, vf, pqf, pkf):
+    out, _ = _g_fwd_call(qf, kf, vf, pqf, pkf, causal, bq, bk, interpret)
+    return out
+
+
+def _routed_gathered_fwd(causal, bq, bk, interpret, qf, kf, vf, pqf, pkf):
+    out, lse = _g_fwd_call(qf, kf, vf, pqf, pkf, causal, bq, bk, interpret)
+    return out, (qf, kf, vf, pqf, pkf, out, lse)
+
+
+def _routed_gathered_bwd(causal, bq, bk, interpret, res, do):
+    qf, kf, vf, pqf, pkf, out, lse = res
+    dq, dk, dv = _g_bwd_call(qf, kf, vf, pqf, pkf, out, lse, do, causal,
+                             bq, bk, interpret)
+    return dq, dk, dv, float0_like(pqf), float0_like(pkf)
+
+
+_routed_gathered.defvjp(_routed_gathered_fwd, _routed_gathered_bwd)
 
 
 def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
                             valid_k=None, bq=128, bk=128,
-                            interpret=True):
-    """qg/kg/vg: (B,H,k,w,dh); pos_q/pos_k: (B,H,k,w) -> (B,H,k,w,dh)."""
+                            interpret=None):
+    """qg/kg/vg: (B,H,k,w,dh); pos_q/pos_k: (B,H,k,w) -> (B,H,k,w,dh).
+
+    Differentiable (custom flash-style VJP). ``interpret=None`` derives
+    from the platform (compiled on TPU, interpret elsewhere)."""
     B, H, kc, w, dh = qg.shape
     bq = min(bq, w)
     bk = min(bk, w)
@@ -83,27 +289,347 @@ def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
     pkf = pos_k.reshape(n, w).astype(jnp.int32)
     if valid_k is not None:
         pkf = jnp.where(valid_k.reshape(n, w), pkf, SENTINEL)
+    out = _routed_gathered(bool(causal), int(bq), int(bk),
+                           default_interpret(interpret), qf, kf, vf, pqf,
+                           pkf)
+    return out.reshape(B, H, kc, w, dh)
 
-    grid = (n, w // bq, w // bk)
-    out = pl.pallas_call(
-        functools.partial(_kernel, causal=causal, scale=1.0 / (dh ** 0.5)),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, dh), lambda c, iq, ik: (c, iq, 0)),
-            pl.BlockSpec((1, bk, dh), lambda c, iq, ik: (c, ik, 0)),
-            pl.BlockSpec((1, bk, dh), lambda c, iq, ik: (c, ik, 0)),
-            pl.BlockSpec((1, bq), lambda c, iq, ik: (c, iq)),
-            pl.BlockSpec((1, bk), lambda c, iq, ik: (c, ik)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, dh), lambda c, iq, ik: (c, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, w, dh), qg.dtype),
+
+# ---------------------------------------------------------------------------
+# Fused gather-free kernel: sequence-layout q/k/v + scalar-prefetch indices
+# ---------------------------------------------------------------------------
+def _rows(seq, idx):
+    """Pull ``idx`` rows of the VMEM-resident sequence plane. Mosaic
+    lowers the sublane gather via dynamic_gather (one-row DMAs on older
+    toolchains); indices are always < N so clip never fires."""
+    return jnp.take(seq, idx, axis=0, mode="clip")
+
+
+def _f_fwd_kernel(qi_ref, ki_ref, *refs, shared, causal, scale, bq, bk):
+    if shared:
+        (q_ref, v_ref, pq_ref, pk_ref, o_ref, lse_ref,
+         qt_ref, pqt_ref, m_ref, l_ref, acc_ref) = refs
+        k_ref = q_ref
+    else:
+        (q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref, lse_ref,
+         qt_ref, pqt_ref, m_ref, l_ref, acc_ref) = refs
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        qidx = qi_ref[b, c, pl.ds(iq * bq, bq)]
+        qt_ref[...] = _rows(q_ref[0], qidx).astype(jnp.float32)
+        pqt_ref[...] = _rows(pq_ref[0], qidx)
+
+    kidx = ki_ref[b, c, pl.ds(ik * bk, bk)]
+    k = _rows(k_ref[0], kidx).astype(jnp.float32)
+    v = _rows(v_ref[0], kidx).astype(jnp.float32)
+    pk = _rows(pk_ref[0], kidx)
+    q = qt_ref[...]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    keep = _keep_mask(pqt_ref[...], pk, causal)
+    s = jnp.where(keep, s, _NEG)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)
+
+
+def _f_dq_kernel(qi_ref, ki_ref, *refs, shared, causal, scale, bq, bk):
+    if shared:
+        (q_ref, v_ref, pq_ref, pk_ref, do_ref, lse_ref, dsum_ref,
+         dq_ref, qt_ref, pqt_ref, dq_acc) = refs
+        k_ref = q_ref
+    else:
+        (q_ref, k_ref, v_ref, pq_ref, pk_ref, do_ref, lse_ref, dsum_ref,
+         dq_ref, qt_ref, pqt_ref, dq_acc) = refs
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+        qidx = qi_ref[b, c, pl.ds(iq * bq, bq)]
+        qt_ref[...] = _rows(q_ref[0], qidx).astype(jnp.float32)
+        pqt_ref[...] = _rows(pq_ref[0], qidx)
+
+    kidx = ki_ref[b, c, pl.ds(ik * bk, bk)]
+    k = _rows(k_ref[0], kidx).astype(jnp.float32)
+    v = _rows(v_ref[0], kidx).astype(jnp.float32)
+    pk = _rows(pk_ref[0], kidx)
+    q = qt_ref[...]
+    do = do_ref[0, 0].astype(jnp.float32)
+    keep = _keep_mask(pqt_ref[...], pk, causal)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    p = jnp.where(keep, jnp.exp(s - lse_ref[0, 0][:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum_ref[0, 0][:, None]) * scale
+    dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        dq_ref[0, 0] = dq_acc[...]
+
+
+def _f_dkv_kernel(qi_ref, ki_ref, *refs, shared, causal, scale, bq, bk):
+    if shared:
+        (q_ref, v_ref, pq_ref, pk_ref, do_ref, lse_ref, dsum_ref,
+         dk_ref, dv_ref, kt_ref, vt_ref, pkt_ref, dk_acc, dv_acc) = refs
+        k_ref = q_ref
+    else:
+        (q_ref, k_ref, v_ref, pq_ref, pk_ref, do_ref, lse_ref, dsum_ref,
+         dk_ref, dv_ref, kt_ref, vt_ref, pkt_ref, dk_acc, dv_acc) = refs
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    ik = pl.program_id(2)
+    iq = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+        kidx = ki_ref[b, c, pl.ds(ik * bk, bk)]
+        kt_ref[...] = _rows(k_ref[0], kidx).astype(jnp.float32)
+        vt_ref[...] = _rows(v_ref[0], kidx).astype(jnp.float32)
+        pkt_ref[...] = _rows(pk_ref[0], kidx)
+
+    qidx = qi_ref[b, c, pl.ds(iq * bq, bq)]
+    q = _rows(q_ref[0], qidx).astype(jnp.float32)
+    pq = _rows(pq_ref[0], qidx)
+    do = do_ref[0, 0].astype(jnp.float32)
+    k = kt_ref[...]
+    v = vt_ref[...]
+    keep = _keep_mask(pq, pkt_ref[...], causal)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    p = jnp.where(keep, jnp.exp(s - lse_ref[0, 0][:, None]), 0.0)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum_ref[0, 0][:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(iq == nq - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...]
+        dv_ref[0, 0] = dv_acc[...]
+
+
+def _f_specs(N, dh, H, shared):
+    """Common fused in_specs: q [k] v sequence planes + the (B,N)
+    position arrays — all index maps ignore the cluster/tile axes (the
+    plane is revisited across every step of its (batch·head)) and take
+    the two trailing scalar-prefetch refs as *_."""
+    plane = lambda b, c, i2, i3, *_: (b, 0, 0)
+    posp = lambda b, c, i2, i3, *_: (b // H, 0)
+    specs = [pl.BlockSpec((1, N, dh), plane)]          # q
+    if not shared:
+        specs.append(pl.BlockSpec((1, N, dh), plane))  # k
+    specs.append(pl.BlockSpec((1, N, dh), plane))      # v
+    specs += [pl.BlockSpec((1, N), posp),              # pos_q (B,N)
+              pl.BlockSpec((1, N), posp)]              # pos_k (B,N)
+    return specs
+
+
+def _f_q_blk(bq, dh):
+    at = lambda b, c, iq, ik, *_: (b, c, iq, 0)
+    rat = lambda b, c, iq, ik, *_: (b, c, iq)
+    return (pl.BlockSpec((1, 1, bq, dh), at), pl.BlockSpec((1, 1, bq), rat))
+
+
+def _f_q_blk_swapped(bq, dh):
+    at = lambda b, c, ik, iq, *_: (b, c, iq, 0)
+    rat = lambda b, c, ik, iq, *_: (b, c, iq)
+    return (pl.BlockSpec((1, 1, bq, dh), at), pl.BlockSpec((1, 1, bq), rat))
+
+
+def _f_fwd_call(qf, kf, vf, qi, ki, posq, posk, shared, causal, bq, bk, H,
+                interpret):
+    BH, N, dh = qf.shape
+    _, kc, w = qi.shape
+    nq, nk = w // bq, w // bk
+    oq_at, olse_at = _f_q_blk(bq, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(BH, kc, nq, nk),
+        in_specs=_f_specs(N, dh, H, shared),
+        out_specs=[oq_at, olse_at],
         scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq,), jnp.int32),
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, dh), jnp.float32),
+        ])
+    operands = (qi, ki, qf) + (() if shared else (kf,)) + (vf, posq, posk)
+    out, lse = pl.pallas_call(
+        functools.partial(_f_fwd_kernel, shared=shared, causal=causal,
+                          scale=1.0 / (dh ** 0.5), bq=bq, bk=bk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, kc, w, dh), qf.dtype),
+            jax.ShapeDtypeStruct((BH, kc, w), jnp.float32),
         ],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
-    )(qf, kf, vf, pqf, pkf)
+    )(*operands)
+    return out, lse
+
+
+def _f_bwd_call(qf, kf, vf, qi, ki, posq, posk, out, lse, do, shared,
+                causal, bq, bk, H, interpret):
+    BH, N, dh = qf.shape
+    _, kc, w = qi.shape
+    nq, nk = w // bq, w // bk
+    dsum = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    scale = 1.0 / (dh ** 0.5)
+    kern_kw = dict(shared=shared, causal=causal, scale=scale, bq=bq,
+                   bk=bk)
+    params4 = _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                            "arbitrary"))
+
+    q_at, r_at = _f_q_blk(bq, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(BH, kc, nq, nk),
+        in_specs=_f_specs(N, dh, H, shared)
+        + [q_at, r_at, r_at],                     # do, lse, dsum
+        out_specs=q_at,                           # dqg per-cluster blocks
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq,), jnp.int32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ])
+    operands = ((qi, ki, qf) + (() if shared else (kf,))
+                + (vf, posq, posk, do, lse, dsum))
+    dqg = pl.pallas_call(
+        functools.partial(_f_dq_kernel, **kern_kw),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, kc, w, dh), jnp.float32),
+        compiler_params=params4,
+        interpret=interpret,
+    )(*operands)
+
+    # swapped grid: key tile parallel over (b, c, ik), query sweep inner
+    q_at2, r_at2 = _f_q_blk_swapped(bq, dh)
+    k_out = lambda b, c, ik, iq, *_: (b, c, ik, 0)
+    grid_spec2 = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(BH, kc, nk, nq),
+        in_specs=_f_specs(N, dh, H, shared)
+        + [q_at2, r_at2, r_at2],
+        out_specs=[pl.BlockSpec((1, 1, bk, dh), k_out),
+                   pl.BlockSpec((1, 1, bk, dh), k_out)],
+        scratch_shapes=[
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk,), jnp.int32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+        ])
+    dkg, dvg = pl.pallas_call(
+        functools.partial(_f_dkv_kernel, **kern_kw),
+        grid_spec=grid_spec2,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, kc, w, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, kc, w, dh), jnp.float32),
+        ],
+        compiler_params=params4,
+        interpret=interpret,
+    )(*operands)
+
+    # scatter-add per-cluster gradient blocks back to sequence layout —
+    # the exact transpose of the kernel's implicit gather; duplicate
+    # memberships accumulate
+    bi = jnp.arange(BH)[:, None]
+    qi2 = qi.reshape(BH, -1)
+    ki2 = ki.reshape(BH, -1)
+    dq = jnp.zeros((BH, N, dh), jnp.float32).at[bi, qi2].add(
+        dqg.reshape(BH, -1, dh))
+    dk = jnp.zeros((BH, N, dh), jnp.float32).at[bi, ki2].add(
+        dkg.reshape(BH, -1, dh))
+    dv = jnp.zeros((BH, N, dh), jnp.float32).at[bi, ki2].add(
+        dvg.reshape(BH, -1, dh))
+    return dq.astype(qf.dtype), dk.astype(kf.dtype), dv.astype(vf.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _routed_fused(shared, causal, bq, bk, H, interpret, qf, kf, vf, qi, ki,
+                  posq, posk):
+    out, _ = _f_fwd_call(qf, kf, vf, qi, ki, posq, posk, shared, causal,
+                         bq, bk, H, interpret)
+    return out
+
+
+def _routed_fused_fwd(shared, causal, bq, bk, H, interpret, qf, kf, vf, qi,
+                      ki, posq, posk):
+    out, lse = _f_fwd_call(qf, kf, vf, qi, ki, posq, posk, shared, causal,
+                           bq, bk, H, interpret)
+    return out, (qf, kf, vf, qi, ki, posq, posk, out, lse)
+
+
+def _routed_fused_bwd(shared, causal, bq, bk, H, interpret, res, do):
+    qf, kf, vf, qi, ki, posq, posk, out, lse = res
+    dq, dk, dv = _f_bwd_call(qf, kf, vf, qi, ki, posq, posk, out, lse, do,
+                             shared, causal, bq, bk, H, interpret)
+    return (dq, dk, dv, float0_like(qi), float0_like(ki),
+            float0_like(posq), float0_like(posk))
+
+
+_routed_fused.defvjp(_routed_fused_fwd, _routed_fused_bwd)
+
+
+def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
+                           kvalid=None, bq=128, bk=128, interpret=None):
+    """Gather-free routed attention on sequence-layout tensors.
+
+    q/v: (B,H,N,dh); k: like q, or None for shared-QK causal mode (keys
+    are read from the q buffer — one VMEM plane instead of two).
+    q_idx/k_idx: (B,H,k,w) sorted membership indices into the sequence.
+    positions: (B,N) int32 original positions (the causal mask compares
+    these). kvalid: (B,N) bool, True = attendable key (padding False).
+    Returns per-cluster outputs (B,H,k,w,dh); callers scatter them back.
+
+    Differentiable: flash-style custom VJP that recomputes p from saved
+    lse stats and scatter-adds per-cluster dq/dk/dv to sequence layout.
+    """
+    B, H, N, dh = q.shape
+    _, _, kc, w = q_idx.shape
+    bq = min(bq, w)
+    bk = min(bk, w)
+    assert w % bq == 0 and w % bk == 0, (w, bq, bk)
+    shared = k is None
+    qf = q.reshape(B * H, N, dh)
+    kf = qf if shared else k.reshape(B * H, N, dh)
+    vf = v.reshape(B * H, N, dh)
+    qi = q_idx.reshape(B * H, kc, w).astype(jnp.int32)
+    ki = k_idx.reshape(B * H, kc, w).astype(jnp.int32)
+    posq = positions.astype(jnp.int32)
+    posk = (jnp.where(kvalid, posq, SENTINEL) if kvalid is not None
+            else posq)
+    out = _routed_fused(shared, bool(causal), int(bq), int(bk), int(H),
+                        default_interpret(interpret), qf, kf, vf, qi, ki,
+                        posq, posk)
     return out.reshape(B, H, kc, w, dh)

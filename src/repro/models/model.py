@@ -44,7 +44,7 @@ def apply_model(params, kstate, batch: Dict[str, jax.Array],
                 cfg: ModelConfig, *, update_state: bool = True,
                 impl: Optional[str] = None, moe_impl: str = "einsum",
                 remat: str = "none", drop_rng: Optional[jax.Array] = None,
-                constrain_fn=None, mesh=None):
+                constrain_fn=None, mesh=None, needs_grad: bool = False):
     positions = batch.get("positions")
     pad_mask = batch.get("pad_mask")
     if cfg.family == "encoder":
@@ -60,7 +60,7 @@ def apply_model(params, kstate, batch: Dict[str, jax.Array],
         image_embeds=batch.get("image_embeds"),
         update_state=update_state, impl=impl, moe_impl=moe_impl,
         remat=remat, drop_rng=drop_rng, constrain_fn=constrain_fn,
-        mesh=mesh)
+        mesh=mesh, needs_grad=needs_grad)
     epilogue = getattr(constrain_fn, "epilogue", None)
     if epilogue is not None:
         x = epilogue(x)          # SP epilogue: re-gather seq for the LM head

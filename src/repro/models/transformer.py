@@ -151,12 +151,14 @@ def layer_kstate(key, spec: LayerSpec, cfg: ModelConfig):
 # attn.attend (DESIGN.md §8)
 # ---------------------------------------------------------------------------
 def self_attention(p, h, cfg: ModelConfig, mode: str, kmu,
-                   positions, pad_mask, update_state, impl=None, mesh=None):
+                   positions, pad_mask, update_state, impl=None, mesh=None,
+                   needs_grad=False):
     """h: (B,N,d) -> ((B,N,d), new_kmu)."""
     q, k, v = L.qkv_project(p, h, cfg, positions, rope=False)
     out = attn_api.attend(spec_for_layer(cfg, mode), q, k, v, state=kmu,
                           positions=positions, pad_mask=pad_mask,
-                          update_state=update_state, impl=impl, mesh=mesh)
+                          update_state=update_state, impl=impl, mesh=mesh,
+                          needs_grad=needs_grad)
     return L.out_project(p, out.out), out.state
 
 
@@ -185,7 +187,7 @@ def _dropout(x, rate, rng):
 def apply_layer(spec: LayerSpec, p, kmu, x, cfg: ModelConfig, *,
                 positions=None, pad_mask=None, image_embeds=None,
                 update_state=True, impl=None, moe_impl="einsum",
-                drop_rng=None, mesh=None):
+                drop_rng=None, mesh=None, needs_grad=False):
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_kmu = kmu
     rngs = (jax.random.split(drop_rng, 2) if drop_rng is not None
@@ -198,7 +200,8 @@ def apply_layer(spec: LayerSpec, p, kmu, x, cfg: ModelConfig, *,
         else:
             a, new_kmu = self_attention(p["attn"], h, cfg, spec.attn, kmu,
                                         positions, pad_mask, update_state,
-                                        impl, mesh=mesh)
+                                        impl, mesh=mesh,
+                                        needs_grad=needs_grad)
         x = x + _dropout(a, cfg.dropout, rngs[0])
         h2 = L.apply_norm(p["ln2"], x, cfg.norm)
         if spec.kind == "moe":
@@ -253,7 +256,8 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
                 positions=None, pad_mask=None, image_embeds=None,
                 update_state=True, impl=None, moe_impl="einsum",
                 remat="none", drop_rng=None,
-                constrain_fn: Optional[Callable] = None, mesh=None):
+                constrain_fn: Optional[Callable] = None, mesh=None,
+                needs_grad=False):
     segments = build_segments(cfg)
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_seg_kstate = []
@@ -284,7 +288,8 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
                     spec, p_group[i], k_group.get(str(i)), x, cfg,
                     positions=positions, pad_mask=pad_mask,
                     image_embeds=image_embeds, update_state=update_state,
-                    impl=impl, moe_impl=moe_impl, drop_rng=rng_i, mesh=mesh)
+                    impl=impl, moe_impl=moe_impl, drop_rng=rng_i,
+                    mesh=mesh, needs_grad=needs_grad)
                 if str(i) in k_group:
                     new_k[str(i)] = nk
                 aux_g = {k: aux_g[k] + aux_i[k] for k in AUX_KEYS}

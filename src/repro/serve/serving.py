@@ -11,7 +11,10 @@ Cache layouts (per segment, stacked over scan groups G):
                     routed to its argmax centroid and attends only that page
                     via take-along-cluster — O(cap . d) per step, no dynamic
                     gather over the full context. Ring-overwrite per page
-                    bounds memory for 500k-token decode.
+                    bounds memory for 500k-token decode. The fused
+                    routing/pallas_fused train/prefill kernel declares no
+                    decode path, so decode resolution here keeps landing on
+                    routing/xla's cluster pages (asserted in tests).
   ssd / rglru       recurrent state (+ causal-conv tail)
   cross             static image K/V computed at prefill
 

@@ -83,10 +83,12 @@ def make_loss_fn(run: RunConfig, impl=None, moe_impl="einsum",
         else:
             inputs, targets = next_token_batch(batch)
             loss_mask = None
+        # needs_grad: this forward is differentiated — attention backend
+        # resolution excludes (or, forced, loudly refuses) non-VJP kernels
         logits, new_k, aux = apply_model(
             params, kstate, inputs, mc, update_state=True, impl=impl,
             moe_impl=moe_impl, remat=tc.remat, drop_rng=drop_rng,
-            constrain_fn=constrain_fn, mesh=mesh)
+            constrain_fn=constrain_fn, mesh=mesh, needs_grad=True)
         pad = inputs.get("pad_mask")
         loss, metrics = lm_loss(logits, targets, pad, tc.z_loss, loss_mask)
         if mc.family == "moe":

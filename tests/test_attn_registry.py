@@ -91,6 +91,31 @@ def test_backend_matches_reference(backend, case):
     assert _maxdiff(out.out, ref.out) < TOL
 
 
+@pytest.mark.parametrize("backend", NON_REFERENCE,
+                         ids=lambda b: b.name.replace("/", ":"))
+def test_backend_grad_matches_reference(backend):
+    """Grad leg of the matrix: every supports_grad backend's jax.grad
+    must match the reference's — a kernel registered with a wrong (or
+    missing) VJP cannot land. supports_grad defaults to False in the
+    registry precisely so this leg is the only way to claim it."""
+    if not backend.caps.supports_grad:
+        pytest.skip(f"{backend.name} declares supports_grad=False")
+    spec = _spec(backend.variant)
+    q, k, v, mu = _inputs(spec)
+
+    def loss(impl):
+        def f(q, k, v):
+            out = A.attend(spec, q, k, v, state=mu, update_state=False,
+                           impl=impl, needs_grad=True).out
+            return (out * out).sum() / 2
+        return f
+
+    g = jax.grad(loss(backend.impl), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss("xla"), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        assert float(jnp.abs(a - b).max()) < 1e-4, backend.name
+
+
 @pytest.mark.parametrize("variant", ["full", "local"])
 def test_decode_matches_apply(variant):
     """Decode case of the matrix: for every registered decode-capable
@@ -230,6 +255,62 @@ def test_auto_resolution_prefers_pallas_on_tpu_only():
     assert A.resolve(spec, platform="tpu").impl == "pallas"
     # padded calls exclude the flash kernel even on TPU
     assert A.resolve(spec, platform="tpu", padded=True).impl == "xla"
+
+
+def test_fused_routing_preferred_on_tpu():
+    """Auto-resolution takes the gather-free fused kernel over the
+    gathered pallas path on TPU (priority 20 vs 10), including under
+    needs_grad (it has a VJP); decode keeps resolving to the xla
+    cluster-paged backend (the fused kernel declares no decode path) —
+    serving's routing decode path is unchanged."""
+    for variant in ("routing", "local+routing"):
+        spec = _spec(variant)
+        assert A.resolve(spec, platform="tpu").impl == "pallas_fused"
+        assert A.resolve(spec, platform="tpu",
+                         needs_grad=True).impl == "pallas_fused"
+        assert A.resolve(spec, platform="cpu").impl == "xla"
+        assert A.decode_backend(spec, platform="tpu").impl == "xla"
+        # beyond the fused kernel's VMEM-resident plane budget
+        # (max_seq_elems caps seq_len x head_dim), auto-selection falls
+        # back to the per-tile gathered kernel instead of failing Mosaic
+        # compilation — and the budget is dh-aware: wide heads shrink
+        # the legal N (dh=32 here -> fallback only past N=32k)
+        assert A.resolve(spec, platform="tpu",
+                         seq_len=16384).impl == "pallas_fused"
+        assert A.resolve(spec, platform="tpu",
+                         seq_len=65536).impl == "pallas"
+    wide = A.AttentionSpec(variant="routing", num_heads=4, num_kv_heads=4,
+                           head_dim=256, routing=ROUTING)
+    assert A.resolve(wide, platform="tpu", seq_len=8192).impl == "pallas"
+
+
+def test_supports_grad_capability_enforced():
+    """A forced non-differentiable backend refuses needs_grad calls at
+    resolution, and jax.grad through its output raises the registry
+    error instead of an opaque tracing failure (the guard)."""
+    spec = _spec("full")
+    q, k, v, _ = _inputs(spec)
+    A.registry.register(Backend(
+        variant="full", impl="_test_nograd",
+        apply=lambda spec, q, k, v, **kw: (q, None),
+        caps=Capabilities(supports_grad=False)))
+    try:
+        with pytest.raises(A.BackendResolutionError, match="supports_grad"):
+            A.attend(spec, q, k, v, impl="_test_nograd", needs_grad=True)
+        # un-announced grad: the guard fires during backward tracing
+        def loss(q):
+            return A.attend(spec, q, k, v, impl="_test_nograd").out.sum()
+        with pytest.raises(A.BackendResolutionError, match="supports_grad"):
+            jax.grad(loss)(q)
+    finally:
+        A.unregister("full", "_test_nograd")
+
+
+def test_builtin_pallas_backends_are_differentiable():
+    """Every built-in Pallas backend carries a custom VJP now — the train
+    path never silently needs the XLA reference again."""
+    for b in A.registered():
+        assert b.caps.supports_grad, b.name
 
 
 def test_every_backend_declares_consistent_hints():

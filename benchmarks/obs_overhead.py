@@ -1,0 +1,127 @@
+"""Routing-stats overhead gate: stats-on train step vs stats-off.
+
+Runs the SAME tiny local+routing model through jitted train steps twice —
+``RoutingConfig.stats`` False then True — and compares median step
+wall-time over ``--iters`` measured steps (after ``--warmup`` compile +
+cache-warm steps). The telemetry is designed to be cheap (one (P, N)
+probe softmax + reductions over intermediates the layer already has), so
+CI gates the relative overhead:
+
+    PYTHONPATH=src python benchmarks/obs_overhead.py \
+        --json obs_overhead.json --max-overhead 0.05
+
+The gate passes when median_on - median_off <= max(rel * median_off,
+floor): tiny CPU steps are timing-noisy, so an absolute floor (default
+2 ms) keeps the relative gate meaningful. The run also sanity-checks the
+stats themselves: entropy within [0, log k], recall/mismatch in [0, 1].
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ModelConfig, RoutingConfig, RunConfig,
+                                TrainConfig, with_overrides)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def build_run(stats: bool) -> RunConfig:
+    cfg = ModelConfig(
+        name="obs-overhead", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+        attention="local+routing",
+        routing=RoutingConfig(num_clusters=4, local_window=32, stats=stats),
+        dtype="float32")
+    return RunConfig(model=cfg, train=TrainConfig(
+        global_batch=2, seq_len=128, steps=100, lr=1e-3))
+
+
+def median_step_time(run: RunConfig, warmup: int, iters: int,
+                     seed: int = 0):
+    step = jax.jit(make_train_step(run), donate_argnums=(0,))
+    state = init_train_state(run, jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed)
+    batch = {"tokens": rng.randint(
+        0, run.model.vocab_size,
+        size=(run.train.global_batch, run.train.seq_len)).astype(np.int32)}
+    metrics = {}
+    for _ in range(warmup):
+        state, metrics = step(state, batch)
+    jax.block_until_ready(state.params)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state, metrics = step(state, batch)
+        jax.block_until_ready(state.params)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), jax.device_get(metrics)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--max-overhead", type=float, default=None,
+                    help="exit nonzero when the stats-on median exceeds "
+                         "stats-off by more than this fraction (subject to "
+                         "--floor-ms)")
+    ap.add_argument("--floor-ms", type=float, default=2.0,
+                    help="absolute slack floor for the gate (timing noise "
+                         "on sub-ms CPU steps)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    run_off = build_run(stats=False)
+    run_on = with_overrides(
+        run_off,
+        model=with_overrides(
+            run_off.model,
+            routing=with_overrides(run_off.model.routing, stats=True)))
+
+    med_off, m_off = median_step_time(run_off, args.warmup, args.iters)
+    med_on, m_on = median_step_time(run_on, args.warmup, args.iters)
+    overhead = (med_on - med_off) / med_off if med_off else float("nan")
+
+    assert "routing/entropy" not in m_off, "stats leaked into stats-off run"
+    ent = float(m_on["routing/entropy"])
+    logk = float(np.log(run_on.model.routing.num_clusters))
+    assert -1e-5 <= ent <= logk + 1e-5, f"entropy {ent} outside [0, log k]"
+    for key in ("routing/recall", "routing/mismatch"):
+        v = float(m_on[key])
+        assert -1e-5 <= v <= 1 + 1e-5, f"{key}={v} outside [0, 1]"
+
+    print("name,us_per_call,derived")
+    print(f"obs_overhead/stats_off,{med_off*1e6:.1f},baseline")
+    print(f"obs_overhead/stats_on,{med_on*1e6:.1f},"
+          f"overhead={overhead*100:.1f}%;entropy={ent:.3f};"
+          f"dead={float(m_on['routing/dead']):.2f};"
+          f"recall={float(m_on['routing/recall']):.3f}")
+
+    record = {"median_off_s": med_off, "median_on_s": med_on,
+              "overhead_frac": overhead, "warmup": args.warmup,
+              "iters": args.iters,
+              "routing": {k.split("/", 1)[1]: float(m_on[k]) for k in m_on
+                          if k.startswith("routing/")}}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    if args.max_overhead is not None:
+        slack = max(args.max_overhead * med_off, args.floor_ms / 1e3)
+        if med_on - med_off > slack:
+            print(f"FAIL: stats-on median {med_on*1e3:.2f} ms exceeds "
+                  f"stats-off {med_off*1e3:.2f} ms by more than "
+                  f"{slack*1e3:.2f} ms", file=sys.stderr)
+            sys.exit(1)
+        print(f"overhead gate passed: +{(med_on-med_off)*1e3:.2f} ms "
+              f"(slack {slack*1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""--obs-sweep: routing-health telemetry rows across sequence lengths.
+
+One row per N through the full ``routed_attention`` module with
+``RoutingConfig.stats`` on: occupancy entropy against its log(k) ceiling,
+dead clusters, balanced-vs-nearest mismatch, sampled attention recall,
+plus the tok/s of the stats-on call — the health numbers reviewers should
+watch drifting when routing code changes, in the same CSV the other
+sweeps print.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import RoutingConfig
+from repro.core.kmeans import init_kmeans
+from repro.core.routing import routed_attention
+
+Row = Tuple[str, float, str]
+
+B, H, DH = 2, 2, 64
+WINDOW = 64
+SEQ_LENS = (256, 512)
+
+
+def obs_sweep_rows(iters: int = 3, seq_lens=SEQ_LENS) -> List[Row]:
+    rows: List[Row] = []
+    for N in seq_lens:
+        kc = max(2, N // WINDOW)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, N, DH))
+        v = jax.random.normal(ks[1], (B, H, N, DH))
+        st = init_kmeans(ks[2], H, kc, DH)
+        cfg = RoutingConfig(num_clusters=kc, stats=True)
+        fn = jax.jit(lambda q, v: routed_attention(
+            q, None, v, st, cfg, update_state=True))
+        out = fn(q, v)
+        jax.block_until_ready(out.out)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, v).out)
+            ts.append(time.perf_counter() - t0)
+        us = float(np.median(ts) * 1e6)
+        st_ = jax.device_get(out.stats)
+        ent = float(np.mean(st_.entropy))
+        rows.append((
+            f"obs_sweep/N{N}", us,
+            f"entropy={ent:.3f}/logk={np.log(kc):.3f};"
+            f"dead={float(np.mean(st_.dead)):.2f}/{kc};"
+            f"mismatch={float(np.mean(st_.mismatch)):.3f};"
+            f"recall={float(np.mean(st_.recall)):.3f};"
+            f"drift={float(np.mean(st_.drift)):.4f};"
+            f"tok_s={B * N / (us / 1e6):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in obs_sweep_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -16,12 +16,18 @@ across N in {1k, 4k, 8k} (tok/s + memory_analysis peak) and rewrites
 ``BENCH_routing.json`` at the repo root — the routing hot-spot's perf
 trajectory; ``--routing-sweep-only`` runs just that (the push-time CI
 bench job).
+
+``--obs-sweep`` appends routing-health telemetry rows (occupancy entropy
+vs log k, dead clusters, balanced-vs-nearest mismatch, sampled attention
+recall, stats-on tok/s) per sequence length; ``--obs-sweep-only`` runs
+just those.
 """
 import sys
 
 
 FLAGS = ("--backend-sweep", "--backend-sweep-only",
-         "--routing-sweep", "--routing-sweep-only")
+         "--routing-sweep", "--routing-sweep-only",
+         "--obs-sweep", "--obs-sweep-only")
 
 
 def main(argv=None) -> None:
@@ -31,6 +37,7 @@ def main(argv=None) -> None:
         raise SystemExit(f"unknown arguments {unknown}; known: {FLAGS}")
     sweep = "--backend-sweep" in argv or "--backend-sweep-only" in argv
     routing = "--routing-sweep" in argv or "--routing-sweep-only" in argv
+    obs = "--obs-sweep" in argv or "--obs-sweep-only" in argv
     # any -only flag skips the paper tables; the sweeps themselves compose
     tables = not any(a.endswith("-only") for a in argv)
     print("name,us_per_call,derived")
@@ -52,6 +59,11 @@ def main(argv=None) -> None:
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
         write_json(record)
+    if obs:
+        from benchmarks.obs_sweep import obs_sweep_rows
+        for name, us, derived in obs_sweep_rows():
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
 
 
 if __name__ == "__main__":

@@ -77,11 +77,13 @@ def workload_max_len(requests: List[Request]) -> int:
 
 
 def run_continuous(cfg, params, kstate, requests, max_slots: int,
-                   max_len: int, warmup: bool = True
+                   max_len: int, warmup: bool = True,
+                   obs_jsonl: str = None
                    ) -> Tuple[Dict[int, List[int]], dict]:
     from repro.serve.engine.metrics import EngineMetrics
     eng = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
-                          max_len=max_len)
+                          max_len=max_len, obs_jsonl=obs_jsonl,
+                          routing_stats=bool(obs_jsonl))
     if warmup:
         # compile the fused decode step outside the measured run (jit
         # caches are per-engine; a cold first step would dominate timing)
@@ -90,7 +92,9 @@ def run_continuous(cfg, params, kstate, requests, max_slots: int,
         eng.metrics = EngineMetrics()
         eng.step_count = 0
     outputs = eng.run(requests)
-    return outputs, eng.metrics.summary()
+    summary = eng.metrics.summary()
+    eng.close()
+    return outputs, summary
 
 
 def run_lockstep(cfg, params, kstate, requests, max_slots: int,
@@ -150,6 +154,14 @@ def main(argv=None) -> None:
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="exit nonzero if continuous-batching decode tok/s "
                          "< this multiple of lock-step (or outputs differ)")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="stream engine telemetry (engine_prefill routing "
+                         "health, per-tick pages health, final summary) as "
+                         "schema v1 JSONL; also enables routing stats in "
+                         "the engine's prefill")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax profiler trace of the continuous "
+                         "run into this directory")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -167,8 +179,11 @@ def main(argv=None) -> None:
 
     out_ls, ls = run_lockstep(cfg, params, kstate, clone_requests(requests),
                               max_slots, max_len)
-    out_cb, cb = run_continuous(cfg, params, kstate,
-                                clone_requests(requests), max_slots, max_len)
+    from repro.obs.trace import profile as obs_profile
+    with obs_profile(args.profile_dir):
+        out_cb, cb = run_continuous(cfg, params, kstate,
+                                    clone_requests(requests), max_slots,
+                                    max_len, obs_jsonl=args.obs_jsonl)
     match = all(out_cb[u] == out_ls[u] for u in out_cb)
     print(f"outputs identical across schedulers: {match}")
 

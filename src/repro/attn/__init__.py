@@ -39,6 +39,8 @@ class AttnOutput(NamedTuple):
     out: jax.Array                  # (B, H, N, dh)
     state: Optional[jax.Array]      # updated centroids (routing variants)
     cache: Optional[dict] = None    # updated decode cache (decode calls)
+    stats: Optional[object] = None  # obs.RoutingStats (routing variants
+    #                                 with RoutingConfig.stats=True)
 
 
 def _platform(platform: Optional[str]) -> str:
@@ -110,13 +112,18 @@ def attend(spec: AttentionSpec, q, k, v, *, state=None, positions=None,
                       positioned=positions is not None,
                       needs_grad=needs_grad, seq_len=q.shape[2],
                       mesh=mesh, impl=impl, platform=plat)
-    out, new_state = backend.apply(spec, q, k, v, state=state,
-                                   positions=positions, pad_mask=pad_mask,
-                                   update_state=update_state,
-                                   interpret=interpret)
+    res = backend.apply(spec, q, k, v, state=state,
+                        positions=positions, pad_mask=pad_mask,
+                        update_state=update_state,
+                        interpret=interpret)
+    # 2-tuple (out, new_state) or 3-tuple (out, new_state, stats):
+    # routing backends surface the RoutingStats aux; everyone else
+    # (including externally registered backends) stays on the 2-tuple
+    out, new_state = res[0], res[1]
+    stats = res[2] if len(res) > 2 else None
     if not backend.caps.supports_grad:
         out = _grad_guard(out, backend.name)
-    return AttnOutput(out=out, state=new_state)
+    return AttnOutput(out=out, state=new_state, stats=stats)
 
 
 def decode_backend(spec: AttentionSpec, *, mesh=None,

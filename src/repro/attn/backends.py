@@ -160,7 +160,9 @@ def _make_routing_apply(kernel_impl: str):
         ro = routed_attention(q, k_in, v_e, KMeansState(mu=state), rc,
                               positions, pad_mask, update_state,
                               impl=kernel_impl, interpret=interpret)
-        return ro.out, ro.state.mu
+        # 3-tuple: routing backends also surface the RoutingStats aux
+        # (None unless rc.stats); attend() tolerates 2- and 3-tuples
+        return ro.out, ro.state.mu, ro.stats
     return apply
 
 
@@ -173,11 +175,11 @@ def _make_mixed_apply(kernel_impl: str):
         o_l, _ = _local_xla_apply(
             _local_subspec(spec), ql, kl, vl, positions=positions,
             pad_mask=pad_mask, interpret=interpret)
-        o_r, new_mu = routing_apply(
+        o_r, new_mu, stats = routing_apply(
             _routing_subspec(spec), qr, kr, vr, state=state,
             positions=positions, pad_mask=pad_mask,
             update_state=update_state, interpret=interpret)
-        return jnp.concatenate([o_l, o_r], axis=1), new_mu
+        return jnp.concatenate([o_l, o_r], axis=1), new_mu, stats
     return apply
 
 

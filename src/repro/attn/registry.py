@@ -77,6 +77,10 @@ class Backend:
 
     apply(spec, q, k, v, *, state, positions, pad_mask, update_state,
           interpret) -> (out, new_state)
+          or (out, new_state, stats): routing backends return a third
+          element — the obs.RoutingStats aux pytree (None unless
+          RoutingConfig.stats) — and attend() accepts either arity, so
+          existing 2-tuple backends keep working unchanged
     decode(spec, q, k, v, *, cache, pos, state, interpret)
           -> (out, new_cache)                      [supports_decode only]
     init_cache(spec, B, max_len, dtype) -> dict    [decode cache layout]

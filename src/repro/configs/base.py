@@ -47,6 +47,14 @@ class RoutingConfig:
     # restored across layers by the local heads + depth (hierarchical
     # routing). segments=1 == the paper's global routing.
     segments: int = 1
+    # Routing-health telemetry (repro.obs): compute the RoutingStats aux
+    # pytree (occupancy entropy, dead clusters, centroid drift, balanced-
+    # vs-nearest mismatch, sampled attention recall) inside the jitted
+    # step. Off by default and a true no-op when off: the stats branch is
+    # a static python conditional, so the compiled HLO is byte-identical
+    # to a build without the flag (asserted in tests/test_obs.py).
+    stats: bool = False
+    stats_probes: int = 8           # probe queries for the recall estimate
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,24 @@ def cluster_scores(r: jax.Array, mu: jax.Array) -> jax.Array:
                       mu.astype(jnp.float32))
 
 
+def nearest_onehot(scores: jax.Array,
+                   mask: Optional[jax.Array] = None) -> jax.Array:
+    """Nearest-centroid (argmax) assignment as a masked fp32 one-hot.
+
+    scores: (B, H, N, k) centroid affinities; mask: (B, N) bool, True =
+    real token -> (B, H, N, k). The building block shared by the EMA
+    update and by occupancy accounting (repro.obs routing-health stats
+    recompute the same assignment from the same scores, so the two views
+    of "which centroid owns this token" can never drift apart).
+    """
+    k = scores.shape[-1]
+    onehot = jax.nn.one_hot(jnp.argmax(scores, axis=-1), k,
+                            dtype=jnp.float32)
+    if mask is not None:
+        onehot = onehot * mask[:, None, :, None].astype(jnp.float32)
+    return onehot
+
+
 def ema_update(state: KMeansState, r_q: jax.Array,
                r_k: Optional[jax.Array] = None,
                mask: Optional[jax.Array] = None,
@@ -77,11 +95,7 @@ def ema_update(state: KMeansState, r_q: jax.Array,
     """
     def one_side(r):
         scores = cluster_scores(r, state.mu)              # (B,H,N,k)
-        assign = jnp.argmax(scores, axis=-1)              # (B,H,N)
-        k = state.mu.shape[1]
-        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (B,H,N,k)
-        if mask is not None:
-            onehot = onehot * mask[:, None, :, None].astype(jnp.float32)
+        onehot = nearest_onehot(scores, mask)             # (B,H,N,k)
         # sum of members and member counts per (head, centroid)
         sums = jnp.einsum("bhnk,bhnd->hkd", onehot, r.astype(jnp.float32))
         cnts = jnp.einsum("bhnk->hk", onehot)

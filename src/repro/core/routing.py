@@ -26,7 +26,7 @@ kernel paths are differentiable (custom flash-style VJPs).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,7 @@ class RoutingOutput(NamedTuple):
     state: KMeansState                  # updated centroids
     attn: Optional[jax.Array] = None    # (B,H,k,w,w) if return_attn
     q_idx: Optional[jax.Array] = None   # (B,H,k,w) if return_attn
+    stats: Optional[Any] = None         # obs.RoutingStats if cfg.stats
 
 
 def balanced_topk(scores: jax.Array, window: int,
@@ -147,7 +148,9 @@ def routed_attention(q: jax.Array,
             interpret=interpret)
         o = out.out.reshape(B, ns, H, Nl, dh).transpose(0, 2, 1, 3, 4) \
                    .reshape(B, H, N, dh)
-        return RoutingOutput(out=o, state=out.state)
+        # stats were computed on the folded (B*ns) batch: per-head means
+        # over segments, which is exactly the shard-local health signal
+        return RoutingOutput(out=o, state=out.state, stats=out.stats)
 
     w = min(cfg.window or max(1, N // cfg.num_clusters), N)
     shared = cfg.share_qk and cfg.causal
@@ -212,9 +215,19 @@ def routed_attention(q: jax.Array,
     if update_state:
         new_state = ema_update(
             state, r_q, None if shared else r_k, pad_mask, cfg.decay)
+    stats = None
+    if cfg.stats:
+        # routing-health telemetry (repro.obs, DESIGN.md §10): reuses the
+        # scores/membership computed above; the static `if` keeps the
+        # stats-off HLO byte-identical to a build without the flag
+        from repro.obs.routing_stats import compute_routing_stats
+        stats = compute_routing_stats(
+            r_q, k_attn, state.mu, new_state.mu, scores_q, q_idx, k_idx,
+            positions, pad_mask, cfg.causal, probes=cfg.stats_probes)
     return RoutingOutput(out=out, state=new_state,
                          attn=attn if return_attn else None,
-                         q_idx=q_idx if return_attn else None)
+                         q_idx=q_idx if return_attn else None,
+                         stats=stats)
 
 
 def _block_attention(qg, kg, vg, pos_q, pos_k, causal, valid_k, return_attn):

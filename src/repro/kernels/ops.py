@@ -10,6 +10,10 @@ All wrappers are differentiable: the kernels carry flash-style
 ``jax.custom_vjp`` backwards (recompute-from-lse), so ``jax.grad``
 through any of them runs Pallas end-to-end instead of falling back to
 the XLA reference.
+
+Every wrapper traces under an obs span ("kernels/<name>") so profiler
+captures and HLO dumps attribute kernel time to the op, not to an
+anonymous pallas_call.
 """
 from __future__ import annotations
 
@@ -20,28 +24,32 @@ import jax
 from repro.kernels import flash_attention as _flash
 from repro.kernels import local_attention as _local
 from repro.kernels import routing_attention as _routing
+from repro.obs.trace import span
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=None):
-    return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
-                                  interpret=interpret)
+    with span("kernels/flash_attention"):
+        return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                      interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
 def local_attention(q, k, v, window, causal=True, interpret=None):
-    return _local.local_attention_kernel(q, k, v, window, causal=causal,
-                                         interpret=interpret)
+    with span("kernels/local_attention"):
+        return _local.local_attention_kernel(q, k, v, window, causal=causal,
+                                             interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
                             valid_k=None, bq=128, bk=128, interpret=None):
-    return _routing.routed_attention_blocks(
-        qg, kg, vg, pos_q, pos_k, causal=causal, valid_k=valid_k,
-        bq=bq, bk=bk, interpret=interpret)
+    with span("kernels/routed_attention_blocks"):
+        return _routing.routed_attention_blocks(
+            qg, kg, vg, pos_q, pos_k, causal=causal, valid_k=valid_k,
+            bq=bq, bk=bk, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
@@ -51,6 +59,7 @@ def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
     """Gather-free fused kernel: sequence-layout q/k/v (k=None reads keys
     from the q buffer — shared-QK causal mode) + (B,H,k,w) membership via
     scalar prefetch. Returns per-cluster blocks (B,H,k,w,dh)."""
-    return _routing.routed_attention_fused(
-        q, k, v, q_idx, k_idx, positions, causal=causal, kvalid=kvalid,
-        bq=bq, bk=bk, interpret=interpret)
+    with span("kernels/routed_attention_fused"):
+        return _routing.routed_attention_fused(
+            q, k, v, q_idx, k_idx, positions, causal=causal, kvalid=kvalid,
+            bq=bq, bk=bk, interpret=interpret)

@@ -41,6 +41,17 @@ def main():
                          "int8_ef: error-feedback int8 gradient exchange "
                          "(data-parallel shard_map path); validated by "
                          "TrainConfig after the deferred imports")
+    ap.add_argument("--obs-jsonl", default=None,
+                    help="append per-step metric records (schema v1 JSONL, "
+                         "validated by `python -m repro.obs.schema`)")
+    ap.add_argument("--routing-stats", action="store_true",
+                    help="compute routing-health telemetry (occupancy "
+                         "entropy, dead clusters, centroid drift, sampled "
+                         "attention recall) inside the jitted step; off by "
+                         "default — stats-off compiles byte-identical HLO")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax profiler trace of the whole run "
+                         "into this directory (TensorBoard/Perfetto)")
     ap.add_argument("--coordinator", default=None,
                     help="host:port of process 0 (or $REPRO_COORDINATOR)")
     ap.add_argument("--num-processes", type=int, default=None,
@@ -69,6 +80,9 @@ def main():
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = with_overrides(cfg, dtype="float32")
+    if args.routing_stats:
+        cfg = with_overrides(
+            cfg, routing=with_overrides(cfg.routing, stats=True))
     run = RunConfig(model=cfg, train=TrainConfig(
         global_batch=args.batch, seq_len=args.seq, steps=args.steps,
         lr=1e-3, schedule="linear_warmup_rsqrt", warmup_steps=20,
@@ -122,11 +136,15 @@ def main():
 
     loader = SyntheticLoader("markov", min(cfg.vocab_size, 512),
                              args.batch, args.seq)
+    from repro.obs import trace as obs_trace
     with mesh:
         tr = Trainer(run, loader, ckpt_dir=args.ckpt_dir, mesh=mesh,
-                     shardings=ts_spec, step_fn=sharded_step)
+                     shardings=ts_spec, step_fn=sharded_step,
+                     obs_jsonl=args.obs_jsonl)
         tr.init_or_restore()   # fresh: sharded init; ckpt: elastic resume
-        out = tr.fit(args.steps)
+        with obs_trace.profile(args.profile_dir):
+            out = tr.fit(args.steps)
+        tr.close()
     hist = tr.metrics_history
     if hist:
         print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")

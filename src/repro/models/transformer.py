@@ -153,13 +153,15 @@ def layer_kstate(key, spec: LayerSpec, cfg: ModelConfig):
 def self_attention(p, h, cfg: ModelConfig, mode: str, kmu,
                    positions, pad_mask, update_state, impl=None, mesh=None,
                    needs_grad=False):
-    """h: (B,N,d) -> ((B,N,d), new_kmu)."""
+    """h: (B,N,d) -> ((B,N,d), new_kmu, stats). ``stats`` is the
+    obs.RoutingStats aux of a routing variant with RoutingConfig.stats
+    on, else None."""
     q, k, v = L.qkv_project(p, h, cfg, positions, rope=False)
     out = attn_api.attend(spec_for_layer(cfg, mode), q, k, v, state=kmu,
                           positions=positions, pad_mask=pad_mask,
                           update_state=update_state, impl=impl, mesh=mesh,
                           needs_grad=needs_grad)
-    return L.out_project(p, out.out), out.state
+    return L.out_project(p, out.out), out.state, out.stats
 
 
 def cross_attention(p, h, image_embeds, cfg: ModelConfig, pad_mask=None):
@@ -198,10 +200,13 @@ def apply_layer(spec: LayerSpec, p, kmu, x, cfg: ModelConfig, *,
             a = cross_attention(p["attn"], h, image_embeds, cfg)
             a = a * jnp.tanh(p["xgate_attn"]).astype(a.dtype)
         else:
-            a, new_kmu = self_attention(p["attn"], h, cfg, spec.attn, kmu,
-                                        positions, pad_mask, update_state,
-                                        impl, mesh=mesh,
-                                        needs_grad=needs_grad)
+            a, new_kmu, a_stats = self_attention(
+                p["attn"], h, cfg, spec.attn, kmu, positions, pad_mask,
+                update_state, impl, mesh=mesh, needs_grad=needs_grad)
+            if a_stats is not None:
+                # rides in aux (popped by apply_stack / prefill into the
+                # scan ys; NOT one of the fixed AUX_KEYS scalars)
+                aux["routing_stats"] = a_stats
         x = x + _dropout(a, cfg.dropout, rngs[0])
         h2 = L.apply_norm(p["ln2"], x, cfg.norm)
         if spec.kind == "moe":
@@ -261,6 +266,7 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
     segments = build_segments(cfg)
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     new_seg_kstate = []
+    seg_stats = []
     constrain = constrain_fn or (lambda t: t)
     # fsdp prefetch (dist/sharding.make_constrain_fn): re-constrain the
     # group's weight slice to its gathered (TP-only) layout at group entry,
@@ -279,6 +285,7 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
                 p_group = gather(p_group)
             aux_g = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
             new_k = {}
+            stats_g = {}
             for i, spec in enumerate(pattern):
                 rng_i = None
                 if drop_rng is not None and cfg.dropout > 0:
@@ -292,8 +299,14 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
                     mesh=mesh, needs_grad=needs_grad)
                 if str(i) in k_group:
                     new_k[str(i)] = nk
+                st = aux_i.pop("routing_stats", None)
+                if st is not None:
+                    # per-layer stats leave the scan as stacked ys (a
+                    # tracer cannot escape the scan body any other way);
+                    # leaves come back with a leading (G,) group axis
+                    stats_g[str(i)] = st
                 aux_g = {k: aux_g[k] + aux_i[k] for k in AUX_KEYS}
-            return constrain(x), new_k, aux_g
+            return constrain(x), new_k, stats_g, aux_g
 
         if remat == "full":
             group_fn = jax.checkpoint(group_fn, static_argnums=())
@@ -304,12 +317,20 @@ def apply_stack(seg_params, seg_kstate, x, cfg: ModelConfig, *,
 
         def scan_body(carry, xs):
             x, aux = carry
-            x, new_k, aux_g = group_fn(x, xs)
+            x, new_k, stats_g, aux_g = group_fn(x, xs)
             aux = {k: aux[k] + aux_g[k] for k in AUX_KEYS}
-            return (x, aux), new_k
+            return (x, aux), (new_k, stats_g)
 
         xs = (seg_params[si], seg_kstate[si], jnp.arange(G))
-        (x, aux_tot), new_k = jax.lax.scan(scan_body, (x, aux_tot), xs)
+        (x, aux_tot), (new_k, seg_st) = jax.lax.scan(
+            scan_body, (x, aux_tot), xs)
         new_seg_kstate.append(new_k)
+        seg_stats.append(seg_st)
         layer_counter += G * len(pattern)
+    if any(seg_st for seg_st in seg_stats):
+        # list over segments of {layer: RoutingStats}, leaves stacked
+        # over scan groups (G, ...); absent entirely when stats are off
+        # so the aux pytree (and with it the HLO) is unchanged
+        aux_tot = dict(aux_tot)
+        aux_tot["routing_stats"] = seg_stats
     return x, new_seg_kstate, aux_tot

@@ -1,0 +1,46 @@
+"""Trace spans + on-demand profiler capture.
+
+``span(name)`` names a region both ways a JAX program is observed:
+
+  * ``jax.named_scope`` — inside a jit trace it tags the emitted HLO ops,
+    so the region shows up named in xplane traces and compiled-module
+    dumps (zero runtime cost; pure metadata);
+  * ``jax.profiler.TraceAnnotation`` — on the host timeline it brackets
+    the python-side region (engine admit/prefill/decode phases, dispatch
+    of a train step), visible in the same xplane capture.
+
+Span naming convention (DESIGN.md §10): ``<subsystem>/<phase>`` —
+``kernels/flash_attention``, ``train/grad``, ``train/exchange``,
+``train/optimizer``, ``engine/admit``, ``engine/prefill``,
+``engine/decode``.
+
+``profile(log_dir)`` wraps ``jax.profiler.trace``: a context manager that
+writes an xplane trace (viewable in TensorBoard / xprof) covering its
+body, or a no-op when ``log_dir`` is falsy — so call sites can thread a
+``--profile-dir`` flag straight through.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Name a region in both the HLO metadata and the host timeline."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def profile(log_dir, enabled: bool = True):
+    """Capture an xplane profiler trace of the body into ``log_dir``
+    (no-op when ``log_dir`` is falsy or ``enabled`` is False)."""
+    if not log_dir or not enabled:
+        yield
+        return
+    os.makedirs(log_dir, exist_ok=True)
+    with jax.profiler.trace(str(log_dir)):
+        yield

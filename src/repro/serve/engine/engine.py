@@ -35,7 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, with_overrides
+from repro.obs import JsonlSink, pages_health
+from repro.obs import routing_stats as obs_rt
+from repro.obs.trace import span
 from repro.serve.engine.metrics import EngineMetrics
 from repro.serve.engine.pool import init_pool, reset_slot, write_slot
 from repro.serve.engine.scheduler import FCFSScheduler
@@ -104,7 +107,19 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params, kstate, *, max_slots: int,
                  max_len: int, token_budget: Optional[int] = None,
-                 record_logits: bool = False, mesh=None):
+                 record_logits: bool = False, mesh=None,
+                 obs_jsonl: Optional[str] = None,
+                 routing_stats: bool = False):
+        if routing_stats:
+            # flip the static stats flag so prefill forwards compute the
+            # routing-health aux (decode-side health comes from the
+            # cluster-page occupancy, which needs no recompile)
+            cfg = with_overrides(
+                cfg, routing=with_overrides(cfg.routing, stats=True))
+        self.routing_stats = routing_stats
+        self._sink = (JsonlSink(obs_jsonl, source="engine")
+                      if obs_jsonl else None)
+        self._last_routing: Dict[str, float] = {}
         self.cfg = cfg
         self.params = params
         self.kstate = kstate
@@ -122,8 +137,8 @@ class InferenceEngine:
                                       donate_argnums=(2,))
         self._decode_greedy = jax.jit(_make_decode_greedy(cfg, mesh=mesh),
                                       donate_argnums=(2,))
-        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg,
-                                                  mesh=mesh))
+        self._prefill = jax.jit(functools.partial(
+            prefill, cfg=cfg, mesh=mesh, return_stats=routing_stats))
         self.pool = init_pool(cfg, max_slots, max_len, mesh=mesh)
         # prefill never mutates its cache argument (functional), so one
         # fresh B=1 lane serves every admission without reallocation
@@ -221,8 +236,17 @@ class InferenceEngine:
         t0 = time.perf_counter()
         req.state = PREFILL
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, lane = self._prefill(self.params, self.kstate,
-                                     self._fresh_lane, {"tokens": toks})
+        with span("engine/prefill"):
+            res = self._prefill(self.params, self.kstate,
+                                self._fresh_lane, {"tokens": toks})
+        logits, lane = res[0], res[1]
+        if self.routing_stats and len(res) > 2:
+            summ = jax.device_get(obs_rt.summarize(res[2]))
+            self._last_routing = {k: float(v) for k, v in summ.items()}
+            if self._sink is not None:
+                self._sink.emit("engine_prefill", metrics=self._last_routing,
+                                step=self.step_count, uid=req.uid,
+                                prompt_len=req.prompt_len)
         self.pool = write_slot(self.pool, slot, lane)
         tok = self._sample_first(req, logits[:, -1])
         dt = time.perf_counter() - t0
@@ -303,9 +327,47 @@ class InferenceEngine:
 
     def step(self) -> None:
         """One engine iteration: admit + prefill, then one decode step."""
-        self._admit_and_prefill()
-        self._decode_once()
+        with span("engine/admit"):
+            self._admit_and_prefill()
+        with span("engine/decode"):
+            self._decode_once()
         self.step_count += 1
+        if self._sink is not None:
+            self._emit_tick()
+
+    def _emit_tick(self) -> None:
+        """One "engine_tick" JSONL record: queue/slot state plus routing
+        health read off the cluster-page occupancy of active lanes
+        (entropy/dead). Centroids are frozen in serving, so drift is 0 by
+        construction; recall is carried from the latest prefill (the only
+        place the full softmax is sampled)."""
+        active = np.array([s is not None for s in self.slots], bool)
+        metrics: Dict[str, float] = {
+            "active_slots": float(active.sum()),
+            "queued": float(len(self.scheduler)),
+            "decode_steps": float(self.metrics.decode_steps),
+        }
+        # fetch only the (tiny) rlen occupancy leaves, never the pages
+        rlens = [leaf for path, leaf
+                 in jax.tree_util.tree_flatten_with_path(self.pool)[0]
+                 if any(isinstance(e, jax.tree_util.DictKey)
+                        and e.key == "rlen" for e in path)]
+        health = pages_health(
+            [{"rlen": r} for r in jax.device_get(rlens)],
+            active=active) if (rlens and active.any()) else None
+        if health is not None:
+            metrics.update(health)
+            metrics["routing/drift"] = 0.0
+            if "routing/recall" in self._last_routing:
+                metrics["routing/recall"] = \
+                    self._last_routing["routing/recall"]
+        self._sink.emit("engine_tick", metrics=metrics, step=self.step_count)
+
+    def close(self) -> None:
+        """Emit the final summary record and close the JSONL sink."""
+        if self._sink is not None:
+            self._sink.emit("engine_summary", metrics=self.metrics.summary())
+            self._sink.close()
 
     def has_work(self) -> bool:
         return bool(len(self.scheduler)) or any(s is not None

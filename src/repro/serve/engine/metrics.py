@@ -6,12 +6,22 @@ All counters are plain python updated on the host side of the step loop;
 batcher is supposed to move versus lock-step batching, and
 ``tokens_per_step`` is its hardware-independent proxy (each decode step
 costs the same jitted call regardless of how many slots are active).
+
+Latency distributions are backed by ``repro.obs`` histograms:
+  engine/ttft_s          per-request time to first token
+  engine/decode_step_s   wall time of each batched decode dispatch
+  engine/itl_s           per-request mean inter-token latency
+                         (finish - first token) / (n_generated - 1),
+                         recorded at finish for requests with >= 2 tokens
+``summary()`` keeps every pre-existing key and adds their p50/p90/p99.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
 from typing import Dict, Optional
+
+from repro.obs import Registry
 
 
 @dataclass
@@ -24,6 +34,7 @@ class RequestStats:
     prefill_step: Optional[int] = None      # engine step of the first token
     first_token_time: Optional[float] = None
     finish_step: Optional[int] = None
+    finish_time: Optional[float] = None
     n_generated: int = 0
 
     @property
@@ -31,6 +42,15 @@ class RequestStats:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.submit_time
+
+    @property
+    def itl_s(self) -> Optional[float]:
+        """Mean inter-token latency over this request's decode phase."""
+        if (self.finish_time is None or self.first_token_time is None
+                or self.n_generated < 2):
+            return None
+        return ((self.finish_time - self.first_token_time)
+                / (self.n_generated - 1))
 
 
 class EngineMetrics:
@@ -45,6 +65,10 @@ class EngineMetrics:
         self.prefill_tokens = 0
         self.prefill_time_s = 0.0
         self.occupancy_sum = 0          # active slots summed over decode steps
+        self.obs = Registry()
+        self._ttft = self.obs.histogram("engine/ttft_s")
+        self._decode_step = self.obs.histogram("engine/decode_step_s")
+        self._itl = self.obs.histogram("engine/itl_s")
 
     def on_submit(self, uid: int, prompt_len: int, step: int) -> None:
         self.requests[uid] = RequestStats(uid, prompt_len, self.clock(),
@@ -55,6 +79,7 @@ class EngineMetrics:
         r = self.requests[uid]
         r.slot, r.prefill_step = slot, step
         r.first_token_time = self.clock()
+        self._ttft.record(r.first_token_time - r.submit_time)
         self.prefill_tokens += n_tokens
         self.prefill_time_s += dt_s
 
@@ -63,12 +88,17 @@ class EngineMetrics:
         self.decode_tokens += n_active
         self.decode_time_s += dt_s
         self.occupancy_sum += n_active
+        self._decode_step.record(dt_s)
 
     def on_token(self, uid: int) -> None:
         self.requests[uid].n_generated += 1
 
     def on_finish(self, uid: int, step: int) -> None:
-        self.requests[uid].finish_step = step
+        r = self.requests[uid]
+        r.finish_step = step
+        r.finish_time = self.clock()
+        if r.itl_s is not None:
+            self._itl.record(r.itl_s)
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -90,7 +120,7 @@ class EngineMetrics:
         return sum(ts) / len(ts) if ts else None
 
     def summary(self) -> dict:
-        return {
+        out = {
             "requests": len(self.requests),
             "finished": sum(1 for r in self.requests.values()
                             if r.finish_step is not None),
@@ -102,3 +132,9 @@ class EngineMetrics:
             "mean_ttft_s": self.mean_ttft_s(),
             "prefill_tokens": self.prefill_tokens,
         }
+        for hname, h in (("ttft", self._ttft), ("itl", self._itl),
+                         ("decode_step", self._decode_step)):
+            if h.count:
+                for p in (50, 90, 99):
+                    out[f"{hname}_p{p}_s"] = h.percentile(p)
+        return out

@@ -209,11 +209,18 @@ def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions, mesh=None):
                                   mesh=mesh)
 
 
-def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None):
+def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None,
+            return_stats: bool = False):
     """Forward over the prefix, returning (logits, filled_cache).
 
     Runs the standard stack forward; caches are filled per layer from the
     layer inputs (python loop over segments, scan over groups).
+
+    ``return_stats`` (static): with RoutingConfig.stats enabled, also
+    return the routing-health stats of the prefix forward as a third
+    element — a list over segments of {layer: obs.RoutingStats} with
+    leaves stacked over scan groups (same structure the train stack puts
+    in its aux). Existing 2-tuple call sites are unchanged.
     """
     from repro.models.transformer import apply_layer
     segments = build_segments(cfg)
@@ -222,10 +229,12 @@ def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None):
         "positions", jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N)))
     x = L.embed(params["embed"], batch["tokens"])
     new_cache = []
+    seg_stats = []
     for si, (pattern, G) in enumerate(segments):
         def group_fn(x, xs, pattern=pattern):
             p_group, k_group, c_group = xs
             new_c = {}
+            stats_g = {}
             for i, spec in enumerate(pattern):
                 c_i, p_i = c_group[str(i)], p_group[i]
                 if spec.kind in ("attn", "moe"):
@@ -257,19 +266,26 @@ def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None):
                         h2 = L.apply_norm(p_i["ln2"], x, cfg.norm)
                         x = x + L.apply_mlp(p_i["ffn"], h2, cfg.act)
                 else:
-                    x, _, _ = apply_layer(
+                    x, _, aux_i = apply_layer(
                         spec, p_i, k_group.get(str(i)), x, cfg,
                         positions=positions, pad_mask=batch.get("pad_mask"),
                         image_embeds=batch.get("image_embeds"),
                         update_state=False)
+                    st = aux_i.pop("routing_stats", None)
+                    if st is not None:
+                        stats_g[str(i)] = st
                 new_c[str(i)] = c_i
-            return x, new_c
+            return x, (new_c, stats_g)
 
         xs = (params["stack"][si], kstate[si], cache[si])
-        x, nc = jax.lax.scan(lambda c, xs: group_fn(c, xs), x, xs)
+        x, (nc, st_g) = jax.lax.scan(lambda c, xs: group_fn(c, xs), x, xs)
         new_cache.append(nc)
+        seg_stats.append(st_g)
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     logits = L.logits_out(params["embed"], x, cfg.tie_embeddings,
                           cfg.logit_softcap)
     from repro.models.model import mask_vocab_pad
-    return mask_vocab_pad(logits, cfg), new_cache
+    logits = mask_vocab_pad(logits, cfg)
+    if return_stats:
+        return logits, new_cache, seg_stats
+    return logits, new_cache

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
 from repro.models.model import apply_model, lm_loss, next_token_batch
+from repro.obs import routing_stats as obs_rt
+from repro.obs.trace import span
 from repro.optim import make_optimizer, make_schedule
 
 MOE_LB_COEF = 1e-2
@@ -95,7 +97,15 @@ def make_loss_fn(run: RunConfig, impl=None, moe_impl="einsum",
             loss = (loss + MOE_LB_COEF * aux["moe_lb_loss"]
                     + MOE_Z_COEF * aux["moe_z_loss"])
         metrics = dict(metrics)
+        aux = dict(aux)
+        rstats = aux.pop("routing_stats", None)
         metrics.update({k: v for k, v in aux.items()})
+        if rstats is not None:
+            # routing-health telemetry (RoutingConfig.stats): model-wide
+            # scalars ("routing/entropy", ...) + per-layer detail arrays
+            # ("rt/{seg}/{layer}/{field}", leading (G,) group axis)
+            metrics.update(obs_rt.summarize(rstats))
+            metrics.update(obs_rt.flatten(rstats))
         metrics["loss"] = loss
         return loss, (new_k, metrics)
 
@@ -140,19 +150,23 @@ def make_grad_fn(run: RunConfig, loss_fn,
         acc_dt = jnp.dtype(tc.accum_dtype)
 
         def body(carry, xs):
-            grads_acc, kst, _ = carry
+            grads_acc, kst = carry
             (loss, (nk, metrics)), g = vg(params, kst, xs, drop_rng)
             grads_acc = gc(jax.tree.map(
                 lambda a, b: a + b.astype(acc_dt), grads_acc, g))
-            return (grads_acc, nk, metrics), loss
+            # metrics leave as stacked ys (meaned below) rather than a
+            # carry: the metric *structure* is dynamic (routing-health
+            # arrays appear per layer when RoutingConfig.stats is on),
+            # so there is no fixed zero-template to initialize a carry
+            return (grads_acc, nk), (loss, metrics)
 
         zeros = gc(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
                                 params))
-        (gacc, new_k, metrics), losses = jax.lax.scan(
-            body, (zeros, kstate, _zero_metrics(run)), mb)
+        (gacc, new_k), (losses, mstack) = jax.lax.scan(
+            body, (zeros, kstate), mb)
         grads = jax.tree.map(lambda g: (g / A).astype(jnp.float32)
                              if g.dtype == jnp.float32 else g / A, gacc)
-        metrics = dict(metrics)
+        metrics = {k: v.mean(0) for k, v in mstack.items()}
         metrics["loss"] = losses.mean()
         return grads, new_k, metrics
 
@@ -162,9 +176,10 @@ def make_grad_fn(run: RunConfig, loss_fn,
 def _finish_step(tc, schedule, opt_update, ts: TrainState, grads, new_k,
                  metrics, new_ef):
     """Shared tail: clip, lr, optimizer update, state assembly."""
-    grads, gn = clip_by_global_norm(grads, tc.grad_clip)
-    lr = schedule(ts.step + 1)
-    new_params, new_opt = opt_update(grads, ts.opt_state, ts.params, lr)
+    with span("train/optimizer"):
+        grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedule(ts.step + 1)
+        new_params, new_opt = opt_update(grads, ts.opt_state, ts.params, lr)
     metrics["grad_norm"] = gn
     metrics["lr"] = lr
     return (TrainState(new_params, new_k, new_opt, ts.step + 1, new_ef),
@@ -212,8 +227,9 @@ def make_train_step(run: RunConfig, impl=None, moe_impl="einsum",
     grad_fn = make_grad_fn(run, loss_fn, grad_constrain)
 
     def train_step(ts: TrainState, batch: Dict[str, jax.Array]):
-        grads, new_k, metrics = grad_fn(ts.params, ts.kstate, batch,
-                                        _drop_rng(run, ts.step))
+        with span("train/grad"):
+            grads, new_k, metrics = grad_fn(ts.params, ts.kstate, batch,
+                                            _drop_rng(run, ts.step))
         if grad_transform is not None:
             grads = grad_transform(grads)
         return _finish_step(tc, schedule, opt_update, ts, grads, new_k,
@@ -283,12 +299,16 @@ def make_compressed_train_step(run: RunConfig, impl=None,
     min_compress = D * 128
 
     def sharded_grads(params, kstate, ef, batch, drop_rng):
-        grads, new_k, metrics = grad_fn(params, kstate, batch, drop_rng)
+        with span("train/grad"):
+            grads, new_k, metrics = grad_fn(params, kstate, batch,
+                                            drop_rng)
         gl, tdef = jax.tree_util.tree_flatten(grads)
         el = jax.tree_util.tree_leaves(ef)
-        pairs = [int8_ef_psum_mean(g, e[0], dp) if g.size >= min_compress
-                 else (jax.lax.pmean(g, dp), e[0])
-                 for g, e in zip(gl, el)]
+        with span("train/exchange"):
+            pairs = [int8_ef_psum_mean(g, e[0], dp)
+                     if g.size >= min_compress
+                     else (jax.lax.pmean(g, dp), e[0])
+                     for g, e in zip(gl, el)]
         mean_g = jax.tree_util.tree_unflatten(tdef, [m for m, _ in pairs])
         new_ef = jax.tree_util.tree_unflatten(tdef,
                                               [e[None] for _, e in pairs])
@@ -318,11 +338,3 @@ def make_compressed_train_step(run: RunConfig, impl=None,
                             metrics, new_ef)
 
     return train_step
-
-
-def _zero_metrics(run: RunConfig):
-    keys = ["nll", "tokens", "loss", "moe_lb_loss", "moe_z_loss",
-            "moe_drop_frac"]
-    if run.train.z_loss:
-        keys.append("z_loss")
-    return {k: jnp.zeros((), jnp.float32) for k in keys}

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import RunConfig
 from repro.data.synthetic import SyntheticLoader
+from repro.obs import JsonlSink, Registry, StepSeries
 from repro.train.train_step import (TrainState, init_train_state,
                                     make_train_step)
 
@@ -40,7 +41,8 @@ class Trainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  mesh=None, shardings=None, straggler_factor: float = 2.5,
                  on_straggler: Optional[Callable[[int, float], None]] = None,
-                 async_ckpt: bool = True, step_fn=None):
+                 async_ckpt: bool = True, step_fn=None,
+                 obs_jsonl: Optional[str] = None):
         self.run = run
         self.loader = loader
         self.mesh = mesh
@@ -57,7 +59,19 @@ class Trainer:
         self.step_fn = jax.jit(fn, donate_argnums=(0,)) \
             if step_fn is None else step_fn
         self.state: Optional[TrainState] = None
-        self.metrics_history: List[Dict[str, float]] = []
+        # per-step metrics live on the obs layer: an append-only history
+        # (what metrics_history used to be) plus an optional JSONL sink
+        # ("train_step" records, schema-validated in CI's obs-smoke)
+        self.obs = Registry()
+        self._sink = (JsonlSink(obs_jsonl, source="trainer")
+                      if obs_jsonl else None)
+        self._series = StepSeries(sink=self._sink, kind="train_step")
+
+    @property
+    def metrics_history(self) -> List[Dict[str, Any]]:
+        """Per-step host metric dicts (unchanged public view; backed by
+        the obs StepSeries since the observability PR)."""
+        return self._series.history
 
     # ------------------------------------------------------------------
     def init_or_restore(self) -> TrainState:
@@ -89,6 +103,12 @@ class Trainer:
             state = jax.device_put(state, self.shardings)
         self.state = state
         return state
+
+    def close(self) -> None:
+        """Flush + close the obs JSONL sink (records are flushed per
+        line, so this is only needed for prompt fd release)."""
+        if self._sink is not None:
+            self._sink.close()
 
     def _install_preemption_handler(self):
         def handler(signum, frame):
@@ -132,12 +152,18 @@ class Trainer:
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            # step_time_s is measured BEFORE the host transfer: it times
+            # dispatch (+ compute, on synchronous backends), not the
+            # blocking device->host copy of the metrics themselves...
             dt = time.perf_counter() - t0
+            # ...which happens here as ONE batched device_get of the
+            # whole dict instead of a per-leaf float() sync loop
+            metrics = jax.device_get(metrics)
             step = int(self.state.step)
             self._watch_stragglers(step, dt)
             metrics["step_time_s"] = dt
-            self.metrics_history.append(metrics)
+            self.obs.histogram("train/step_time_s").record(dt)
+            self._series.record(step, metrics)
             if self.mgr is not None and step % self.ckpt_every == 0:
                 self._checkpoint()
         # final (or preemption) checkpoint: synchronous

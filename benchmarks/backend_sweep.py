@@ -86,9 +86,10 @@ def backend_sweep_rows(iters: int = 3) -> List[Row]:
                             ("pad", caps.supports_pad_mask),
                             ("grad", caps.supports_grad),
                             ("tpu", caps.needs_tpu)] if on)
+        layout = backend.layout.name if backend.layout is not None else "-"
         rows.append((f"backends/{backend.variant}:{backend.impl}", us,
                      f"tok_s={tok_s:.0f};peak_mb={peak/2**20:.1f};"
-                     f"cache={caps.cache_layout or '-'};caps={flags}"))
+                     f"cache={layout};caps={flags}"))
     return rows
 
 

@@ -1,0 +1,229 @@
+"""Tiered KV store: resume-vs-re-prefill speedup, oversubscription, and
+prefix-cache hit rate (DESIGN.md §11).
+
+Three measurements on one model:
+
+  resume vs re-prefill   the latency of bringing a parked session back
+                         (KVStore.resume + write_slot) against recomputing
+                         its lane from the prompt (prefill + write_slot).
+                         Resume is a host→device copy and skips the model
+                         forward pass entirely, so it must win by a wide
+                         margin — the ``--min-speedup`` gate (CI: 2x)
+                         fails the run if it does not.
+  oversubscription       sessions ≫ slots through the engine with
+                         time-slice rotation: parks/resumes, bytes moved,
+                         park/resume p50 latency, and a bit-exactness
+                         check against a never-evicting pool of
+                         ``n_sessions`` slots.
+  prefix hit rate        many sessions sharing few distinct prompts with
+                         a PrefixCache: measured hit rate must equal
+                         1 - unique/total (exact full-prompt keying).
+
+Run:  PYTHONPATH=src python -m benchmarks.kv_offload
+CI:   PYTHONPATH=src python -m benchmarks.kv_offload --smoke \
+          --json benchmarks/kv_offload_smoke.json --min-speedup 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import statistics
+import sys
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.serve_engine import build_model, make_workload
+from repro.serve.engine import InferenceEngine, init_pool, write_slot
+from repro.serve.kvstore import KVStore, PrefixCache
+from repro.serve.serving import init_cache, prefill
+
+
+def _prefill_lane(cfg, params, kstate, prompt: List[int], max_len: int,
+                  jit_prefill):
+    lane = init_cache(cfg, 1, max_len)
+    _, lane = jit_prefill(params, kstate, lane,
+                          {"tokens": jnp.asarray(prompt, jnp.int32)[None]})
+    return lane
+
+
+def bench_resume_vs_prefill(cfg, params, kstate, prompt_len: int,
+                            max_len: int, trials: int = 7) -> dict:
+    """Median wall time of resume-into-slot vs re-prefill-into-slot."""
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab_size, size=prompt_len).tolist()
+    jit_prefill = jax.jit(functools.partial(prefill, cfg=cfg))
+    pool = init_pool(cfg, 2, max_len)
+    lane = _prefill_lane(cfg, params, kstate, prompt, max_len, jit_prefill)
+    store = KVStore()
+    # warm both paths (compile prefill/write_slot; touch the store once)
+    store.park(0, lane)
+    jax.block_until_ready(write_slot(pool, 0, store.resume(0)))
+    jax.block_until_ready(write_slot(
+        pool, 0, _prefill_lane(cfg, params, kstate, prompt, max_len,
+                               jit_prefill)))
+
+    t_resume, t_prefill = [], []
+    for _ in range(trials):
+        store.park(0, lane)             # park cost not charged to resume
+        t0 = time.perf_counter()
+        p = write_slot(pool, 0, store.resume(0))
+        jax.block_until_ready(p)
+        t_resume.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        fresh = _prefill_lane(cfg, params, kstate, prompt, max_len,
+                              jit_prefill)
+        p = write_slot(pool, 0, fresh)
+        jax.block_until_ready(p)
+        t_prefill.append(time.perf_counter() - t0)
+    resume_s = statistics.median(t_resume)
+    prefill_s = statistics.median(t_prefill)
+    return {
+        "prompt_len": prompt_len,
+        "resume_ms": resume_s * 1e3,
+        "reprefill_ms": prefill_s * 1e3,
+        "speedup": prefill_s / resume_s if resume_s else float("nan"),
+        "parked_bytes": store.stats()["kvstore/bytes_to_host"] / (trials + 1),
+    }
+
+
+def bench_oversubscription(cfg, params, kstate, n_sessions: int,
+                           max_slots: int, max_len: int,
+                           time_slice: int = 4) -> dict:
+    """n_sessions through max_slots lanes; outputs must match a pool big
+    enough to never evict."""
+    mk = lambda: make_workload(cfg, n_requests=n_sessions, arrival_every=0)
+    big = InferenceEngine(cfg, params, kstate, max_slots=n_sessions,
+                          max_len=max_len)
+    out_big = big.run(mk())
+
+    eng = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
+                          max_len=max_len, time_slice=time_slice)
+    t0 = time.perf_counter()
+    out = eng.run(mk())
+    wall_s = time.perf_counter() - t0
+    stats = eng.kvstore.stats()
+    summ = eng.metrics.summary()
+    return {
+        "n_sessions": n_sessions, "max_slots": max_slots,
+        "time_slice": time_slice, "wall_s": wall_s,
+        "outputs_identical": out == out_big,
+        "parks": summ["parks"], "resumes": summ["resumes"],
+        "bytes_to_host": stats["kvstore/bytes_to_host"],
+        "bytes_to_device": stats["kvstore/bytes_to_device"],
+        "park_p50_ms": stats.get("kvstore/park_p50_s", 0.0) * 1e3,
+        "resume_p50_ms": stats.get("kvstore/resume_p50_s", 0.0) * 1e3,
+        "tokens_per_step": summ["tokens_per_step"],
+    }
+
+
+def bench_prefix_hit_rate(cfg, params, kstate, n_sessions: int,
+                          n_unique: int, max_len: int) -> dict:
+    """n_sessions drawn round-robin from n_unique distinct prompts."""
+    from repro.serve.engine import Request
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, cfg.vocab_size, size=24).tolist()
+               for _ in range(n_unique)]
+    reqs = [Request(uid=i, prompt=list(prompts[i % n_unique]),
+                    max_new_tokens=8, arrival_step=i)
+            for i in range(n_sessions)]
+    pc = PrefixCache()
+    eng = InferenceEngine(cfg, params, kstate, max_slots=2, max_len=max_len,
+                          prefix_cache=pc)
+    eng.run(reqs)
+    return {
+        "n_sessions": n_sessions, "n_unique_prompts": n_unique,
+        "hit_rate": pc.hit_rate,
+        "expected_hit_rate": 1.0 - n_unique / n_sessions,
+        "hits": pc.stats()["kvstore/prefix_hits"],
+        "misses": pc.stats()["kvstore/prefix_misses"],
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller model + workload (CI regression gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if resume is not at least this many "
+                         "times faster than re-prefill (or outputs diverge, "
+                         "or the prefix hit rate is off)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg, params, kstate = build_model(num_layers=2, d_model=128,
+                                          num_heads=4, num_kv_heads=2,
+                                          d_ff=256)
+        prompt_len, n_sessions, max_slots = 48, 12, 4
+    else:
+        cfg, params, kstate = build_model()
+        prompt_len, n_sessions, max_slots = 128, 16, 4
+    max_len = prompt_len + 64
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
+          f"{n_sessions} sessions over {max_slots} slots, "
+          f"max_len={max_len}")
+
+    rv = bench_resume_vs_prefill(cfg, params, kstate, prompt_len, max_len)
+    print(f"resume {rv['resume_ms']:.2f} ms vs re-prefill "
+          f"{rv['reprefill_ms']:.2f} ms (prompt {rv['prompt_len']} tok, "
+          f"parked {rv['parked_bytes']/1024:.0f} KiB) -> "
+          f"{rv['speedup']:.1f}x")
+
+    ov = bench_oversubscription(cfg, params, kstate, n_sessions, max_slots,
+                                max_len)
+    print(f"oversubscription: {ov['parks']} parks / {ov['resumes']} resumes, "
+          f"park p50 {ov['park_p50_ms']:.2f} ms, resume p50 "
+          f"{ov['resume_p50_ms']:.2f} ms, "
+          f"{ov['bytes_to_host']/2**20:.1f} MiB offloaded, "
+          f"outputs identical: {ov['outputs_identical']}")
+
+    pf = bench_prefix_hit_rate(cfg, params, kstate, n_sessions,
+                               n_unique=max(2, n_sessions // 4),
+                               max_len=max_len)
+    print(f"prefix cache: {pf['hits']:.0f} hits / {pf['misses']:.0f} misses "
+          f"-> hit rate {pf['hit_rate']:.2f} "
+          f"(expected {pf['expected_hit_rate']:.2f})")
+
+    if args.json:
+        record = {"smoke": args.smoke, "model": cfg.name,
+                  "params_m": cfg.param_count() / 1e6,
+                  "resume_vs_prefill": rv, "oversubscription": ov,
+                  "prefix_cache": pf}
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    if args.min_speedup is not None:
+        ok = True
+        if not ov["outputs_identical"]:
+            print("FAIL: park/resume outputs diverged from the "
+                  "never-evicting pool", file=sys.stderr)
+            ok = False
+        if not (ov["parks"] > 0 and ov["resumes"] > 0):
+            print("FAIL: oversubscription exercised no park/resume",
+                  file=sys.stderr)
+            ok = False
+        if not rv["speedup"] >= args.min_speedup:   # NaN fails too
+            print(f"FAIL: resume {rv['speedup']:.2f}x < required "
+                  f"{args.min_speedup:.2f}x re-prefill", file=sys.stderr)
+            ok = False
+        if abs(pf["hit_rate"] - pf["expected_hit_rate"]) > 1e-9:
+            print(f"FAIL: prefix hit rate {pf['hit_rate']:.3f} != expected "
+                  f"{pf['expected_hit_rate']:.3f}", file=sys.stderr)
+            ok = False
+        if not ok:
+            sys.exit(1)
+        print(f"kv-offload gate passed: resume {rv['speedup']:.2f}x >= "
+              f"{args.min_speedup:.2f}x, bit-exact, prefix hit rate on "
+              f"target")
+
+
+if __name__ == "__main__":
+    main()

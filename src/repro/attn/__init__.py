@@ -26,9 +26,10 @@ import jax
 from repro.attn import backends as _backends           # noqa: F401 (registers)
 from repro.attn import registry
 from repro.attn.registry import (Backend, BackendResolutionError,  # noqa
-                                 Capabilities, backends_for,
-                                 cache_fill_values, cache_sharding_hints,
-                                 get, registered, resolve, unregister)
+                                 CacheLayout, Capabilities, backends_for,
+                                 cache_head_axes, cache_reset_values,
+                                 get, pageable_cache_leaves, registered,
+                                 resolve, unregister)
 from repro.attn.spec import (AttentionSpec, head_split,  # noqa: F401
                              resolve_chunk, seq_shardable, spec_for_layer,
                              specs_for_model, variant_for_layer)
@@ -138,7 +139,7 @@ def decode_backend(spec: AttentionSpec, *, mesh=None,
 def init_decode_cache(spec: AttentionSpec, B: int, max_len: int, dtype, *,
                       mesh=None, impl: Optional[str] = None):
     """The cache-leaf dict declared by the resolved decode backend."""
-    return decode_backend(spec, mesh=mesh, impl=impl).init_cache(
+    return decode_backend(spec, mesh=mesh, impl=impl).layout.init(
         spec, B, max_len, dtype)
 
 
@@ -146,5 +147,5 @@ def prefill_cache(spec: AttentionSpec, cache, q, k, v, *, positions,
                   state=None, mesh=None, impl: Optional[str] = None):
     """Fill the decode cache from prefix q/k/v, per the resolved decode
     backend's layout."""
-    return decode_backend(spec, mesh=mesh, impl=impl).prefill_fill(
+    return decode_backend(spec, mesh=mesh, impl=impl).layout.fill(
         spec, cache, q, k, v, positions=positions, state=state)

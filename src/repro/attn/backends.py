@@ -32,10 +32,13 @@ content, and the paper's causal mask runs on original positions), and
 the local+routing split ropes only its local half. Callers hand in raw
 (un-roped) q/k/v plus positions.
 
-Every backend with a decode path also owns its cache layout: the leaf
-dict ``init_cache`` builds, how prefill fills it, which leaf axes carry
-heads (sharding hints), and per-leaf reset fill values. The slot-pooled
-serving engine consumes all four through the registry.
+Every backend with a decode path also owns its cache layout as a typed
+``CacheLayout`` object: how the leaf dict is built (``init``), how
+prefill fills it (``fill``), which leaf axes carry heads (sharding
+hints), per-leaf reset fill values, and which leaves are cluster-paged
+(``pageable_leaves`` + ``page_len_leaf``, consumed by the tiered KV
+store for per-page compaction). The slot-pooled serving engine and the
+KV store consume all of it through the registry.
 """
 from __future__ import annotations
 
@@ -45,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.attn import registry
-from repro.attn.registry import Backend, Capabilities
+from repro.attn.registry import Backend, CacheLayout, Capabilities
 from repro.attn.spec import AttentionSpec, head_split, resolve_chunk
 from repro.core.attention import full_attention
 from repro.core.kmeans import KMeansState, normalize_routing
@@ -404,15 +407,32 @@ def _mixed_fill(spec, cache, q, k, v, *, positions, state=None):
 _RING_FILLS = {"lpos": -1}
 _RING_AXES = {"lk": 2, "lv": 2}
 _PAGE_AXES = {"rk": 2, "rv": 2, "rlen": 2}
+_PAGE_LEAVES = ("rk", "rv")
+
+APPEND_LAYOUT = CacheLayout(
+    name="append", init=_append_cache, fill=_append_fill,
+    head_axes={"k": 2, "v": 2})
+
+RING_LAYOUT = CacheLayout(
+    name="ring", init=_ring_cache, fill=_ring_fill,
+    reset_values=_RING_FILLS, head_axes=_RING_AXES)
+
+PAGES_LAYOUT = CacheLayout(
+    name="pages", init=_pages_cache, fill=_pages_fill,
+    head_axes=_PAGE_AXES, pageable_leaves=_PAGE_LEAVES,
+    page_len_leaf="rlen")
+
+MIXED_LAYOUT = CacheLayout(
+    name="ring+pages", init=_mixed_cache, fill=_mixed_fill,
+    reset_values=_RING_FILLS, head_axes={**_RING_AXES, **_PAGE_AXES},
+    pageable_leaves=_PAGE_LEAVES, page_len_leaf="rlen")
 
 registry.register(Backend(
     variant="full", impl="xla", apply=_full_xla_apply,
-    decode=_full_decode, init_cache=_append_cache,
-    prefill_fill=_append_fill,
-    cache_head_axes={"k": 2, "v": 2},
+    decode=_full_decode, layout=APPEND_LAYOUT,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
                       supports_pad_mask=True, supports_logit_scale=True,
-                      supports_grad=True, cache_layout="append")))
+                      supports_grad=True)))
 
 # supports_positions=False: the flash kernel masks causality by row
 # index — the positions-aware reference must serve packed/offset calls
@@ -424,11 +444,9 @@ registry.register(Backend(
 
 registry.register(Backend(
     variant="local", impl="xla", apply=_local_xla_apply,
-    decode=_local_decode, init_cache=_ring_cache, prefill_fill=_ring_fill,
-    cache_head_axes=_RING_AXES, cache_fill=_RING_FILLS,
+    decode=_local_decode, layout=RING_LAYOUT,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
-                      supports_pad_mask=True, supports_grad=True,
-                      cache_layout="ring")))
+                      supports_pad_mask=True, supports_grad=True)))
 
 registry.register(Backend(
     variant="local", impl="pallas", apply=_local_pallas_apply, priority=10,
@@ -438,11 +456,9 @@ registry.register(Backend(
 
 registry.register(Backend(
     variant="routing", impl="xla", apply=_make_routing_apply("xla"),
-    decode=_routing_decode, init_cache=_pages_cache,
-    prefill_fill=_pages_fill, cache_head_axes=_PAGE_AXES,
+    decode=_routing_decode, layout=PAGES_LAYOUT,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
-                      supports_pad_mask=True, supports_grad=True,
-                      cache_layout="pages")))
+                      supports_pad_mask=True, supports_grad=True)))
 
 registry.register(Backend(
     variant="routing", impl="pallas", apply=_make_routing_apply("pallas"),
@@ -473,11 +489,9 @@ registry.register(Backend(
 
 registry.register(Backend(
     variant="local+routing", impl="xla", apply=_make_mixed_apply("xla"),
-    decode=_mixed_decode, init_cache=_mixed_cache, prefill_fill=_mixed_fill,
-    cache_head_axes={**_RING_AXES, **_PAGE_AXES}, cache_fill=_RING_FILLS,
+    decode=_mixed_decode, layout=MIXED_LAYOUT,
     caps=Capabilities(supports_decode=True, supports_mesh=True,
-                      supports_pad_mask=True, supports_grad=True,
-                      cache_layout="ring+pages")))
+                      supports_pad_mask=True, supports_grad=True)))
 
 registry.register(Backend(
     variant="local+routing", impl="pallas",

@@ -2,9 +2,9 @@
 
 A ``Backend`` bundles everything one implementation of one variant can
 do: the train/prefill ``apply`` math, optionally a single-token
-``decode`` against the cache layout it declares (``init_cache`` /
-``prefill_fill`` own that layout), sharding hints for the layout's head
-axes, and a ``Capabilities`` record the resolver filters on.
+``decode`` against the typed ``CacheLayout`` it declares (cache init,
+prefill fill, reset fill values, head-axis sharding hints, pageable
+page structure), and a ``Capabilities`` record the resolver filters on.
 
 Resolution order (``resolve``): among the backends registered for the
 spec's variant, drop those whose capabilities don't cover the call
@@ -21,7 +21,8 @@ mode this registry exists to kill.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.attn.spec import AttentionSpec
@@ -29,6 +30,57 @@ from repro.attn.spec import AttentionSpec
 
 class BackendResolutionError(ValueError):
     """No registered backend satisfies the call (or a forced one can't)."""
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    """Typed decode-cache layout owned by a backend — the one object that
+    answers every layout question the serving stack used to scatter
+    across free functions (``serving.cache_reset_value``,
+    ``registry.cache_fill_values``, ``cache_head_axes``).
+
+    ``init(spec, B, max_len, dtype)``   build the cache-leaf dict
+    ``fill(spec, cache, q, k, v, *, positions, state)``
+                                        fill it from prefix q/k/v
+    ``reset_values``   leaf name -> init/reset fill value (default 0);
+                       ``fill_values`` is a compat alias
+    ``head_axes``      leaf name -> axis carrying the head dim in POOL
+                       coords (leaves are (G, B, head, ...) once stacked
+                       over scan groups) — dist.sharding.cache_sharding
+                       consumes the merged map
+    ``pageable_leaves`` leaf names laid out as cluster pages
+                       (B, H, kc, cap, ...) whose occupied prefix per
+                       page is ``min(page_len_leaf, cap)`` — the tiered
+                       KV store transfers/evicts these at per-page
+                       granularity instead of whole-lane blobs
+    ``page_len_leaf``  the (B, H, kc) int leaf counting writes per page
+    ``lane_bytes``     bytes of one B=1 lane at (spec, max_len, dtype) —
+                       abstract-eval'd, nothing is allocated
+    """
+
+    name: str
+    init: Optional[Callable] = None
+    fill: Optional[Callable] = None
+    reset_values: Mapping[str, int] = field(default_factory=dict)
+    head_axes: Mapping[str, int] = field(default_factory=dict)
+    pageable_leaves: Tuple[str, ...] = ()
+    page_len_leaf: str = ""
+
+    @property
+    def fill_values(self) -> Mapping[str, int]:
+        return self.reset_values
+
+    def reset_value(self, leaf_name: str) -> int:
+        return self.reset_values.get(leaf_name, 0)
+
+    def lane_bytes(self, spec: AttentionSpec, max_len: int, dtype) -> int:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        dt = jnp.dtype(dtype)
+        shapes = jax.eval_shape(lambda: self.init(spec, 1, max_len, dt))
+        return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(shapes)))
 
 
 @dataclass(frozen=True)
@@ -68,7 +120,12 @@ class Capabilities:
     needs_tpu: bool = False
     max_seq: Optional[int] = None
     max_seq_elems: Optional[int] = None
-    cache_layout: str = ""          # "", "append", "ring", "pages", ...
+    # DEPRECATED (one-release shim): the stringly-typed layout tag.
+    # The typed ``Backend.layout`` (a CacheLayout) is authoritative;
+    # ``register`` mirrors ``layout.name`` into this field so external
+    # readers of the old string keep working for one release. Do not
+    # read it in new code — use ``backend.layout``.
+    cache_layout: str = ""
 
 
 @dataclass(frozen=True)
@@ -83,13 +140,10 @@ class Backend:
           existing 2-tuple backends keep working unchanged
     decode(spec, q, k, v, *, cache, pos, state, interpret)
           -> (out, new_cache)                      [supports_decode only]
-    init_cache(spec, B, max_len, dtype) -> dict    [decode cache layout]
-    prefill_fill(spec, cache, q, k, v, *, positions, state) -> dict
-    cache_head_axes: leaf name -> axis of the head dim in pool coords
-          (leaves are (G, B, head, ...) once stacked over scan groups) —
-          consumed by dist.sharding.cache_sharding.
-    cache_fill: leaf name -> reset/init fill value (default 0) — consumed
-          by the slot pool's reset_slot.
+    layout: the backend's typed CacheLayout — cache init, prefill fill,
+          reset fill values, head-axis sharding hints, pageable-page
+          structure, and lane-byte accounting, all in one object
+          (decode-capable backends must declare one).
     """
 
     variant: str
@@ -97,10 +151,7 @@ class Backend:
     apply: Callable
     caps: Capabilities
     decode: Optional[Callable] = None
-    init_cache: Optional[Callable] = None
-    prefill_fill: Optional[Callable] = None
-    cache_head_axes: Mapping[str, int] = field(default_factory=dict)
-    cache_fill: Mapping[str, int] = field(default_factory=dict)
+    layout: Optional[CacheLayout] = None
     priority: int = 0
 
     @property
@@ -110,6 +161,27 @@ class Backend:
     @property
     def name(self) -> str:
         return f"{self.variant}/{self.impl}"
+
+    # -- deprecated accessors (pre-CacheLayout spelling) -------------------
+    @property
+    def init_cache(self) -> Optional[Callable]:
+        """DEPRECATED: use ``backend.layout.init``."""
+        return self.layout.init if self.layout is not None else None
+
+    @property
+    def prefill_fill(self) -> Optional[Callable]:
+        """DEPRECATED: use ``backend.layout.fill``."""
+        return self.layout.fill if self.layout is not None else None
+
+    @property
+    def cache_head_axes(self) -> Mapping[str, int]:
+        """DEPRECATED: use ``backend.layout.head_axes``."""
+        return self.layout.head_axes if self.layout is not None else {}
+
+    @property
+    def cache_fill(self) -> Mapping[str, int]:
+        """DEPRECATED: use ``backend.layout.reset_values``."""
+        return self.layout.reset_values if self.layout is not None else {}
 
 
 _REGISTRY: Dict[Tuple[str, str], Backend] = {}
@@ -121,9 +193,31 @@ def register(backend: Backend) -> Backend:
     if backend.caps.supports_decode and backend.decode is None:
         raise ValueError(f"{backend.name}: supports_decode without a "
                          f"decode fn")
-    if backend.caps.supports_decode and backend.init_cache is None:
+    if backend.caps.supports_decode and (
+            backend.layout is None or backend.layout.init is None
+            or backend.layout.fill is None):
         raise ValueError(f"{backend.name}: supports_decode without a "
-                         f"declared cache layout (init_cache)")
+                         f"declared CacheLayout (layout.init/layout.fill)")
+    if backend.layout is not None:
+        # one-release shim: mirror the typed layout's name into the
+        # deprecated caps.cache_layout string so external readers of the
+        # old field keep seeing the right value. A backend that sets the
+        # string itself must agree with its typed layout.
+        if (backend.caps.cache_layout
+                and backend.caps.cache_layout != backend.layout.name):
+            raise ValueError(
+                f"{backend.name}: deprecated caps.cache_layout "
+                f"{backend.caps.cache_layout!r} contradicts the typed "
+                f"layout {backend.layout.name!r}")
+        if backend.caps.cache_layout != backend.layout.name:
+            object.__setattr__(
+                backend, "caps",
+                replace(backend.caps, cache_layout=backend.layout.name))
+    elif backend.caps.cache_layout:
+        warnings.warn(
+            f"{backend.name}: caps.cache_layout is a deprecated string "
+            f"tag; declare a typed CacheLayout via Backend(layout=...)",
+            DeprecationWarning, stacklevel=2)
     _REGISTRY[backend.key] = backend
     return backend
 
@@ -153,32 +247,53 @@ def registered() -> List[Backend]:
     return list(_REGISTRY.values())
 
 
-def cache_sharding_hints() -> Dict[str, int]:
-    """Merged leaf-name -> head-axis map declared by every registered
-    backend (pool coords). dist.sharding consumes this instead of
+def _layouts() -> List[CacheLayout]:
+    return [b.layout for b in _REGISTRY.values() if b.layout is not None]
+
+
+def cache_head_axes() -> Dict[str, int]:
+    """Merged leaf-name -> head-axis map over every registered backend's
+    CacheLayout (pool coords). dist.sharding consumes this instead of
     hardcoding cache leaf names."""
     hints: Dict[str, int] = {}
-    for b in _REGISTRY.values():
-        for leaf, axis in b.cache_head_axes.items():
+    for lo in _layouts():
+        for leaf, axis in lo.head_axes.items():
             prev = hints.setdefault(leaf, axis)
             if prev != axis:
                 raise ValueError(
                     f"conflicting head-axis hints for cache leaf "
-                    f"{leaf!r}: {prev} vs {axis} ({b.name})")
+                    f"{leaf!r}: {prev} vs {axis} (layout {lo.name!r})")
     return hints
 
 
-def cache_fill_values() -> Dict[str, int]:
-    """Merged leaf-name -> reset fill value declared by the backends."""
+def cache_reset_values() -> Dict[str, int]:
+    """Merged leaf-name -> reset fill value over the registered layouts
+    (the slot pool's reset_slot; leaves not listed reset to 0)."""
     fills: Dict[str, int] = {}
-    for b in _REGISTRY.values():
-        for leaf, val in b.cache_fill.items():
+    for lo in _layouts():
+        for leaf, val in lo.reset_values.items():
             prev = fills.setdefault(leaf, val)
             if prev != val:
                 raise ValueError(
                     f"conflicting fill values for cache leaf {leaf!r}: "
-                    f"{prev} vs {val} ({b.name})")
+                    f"{prev} vs {val} (layout {lo.name!r})")
     return fills
+
+
+def pageable_cache_leaves() -> Dict[str, str]:
+    """Merged leaf-name -> page-length-leaf map for cluster-page-
+    structured cache leaves ((B, H, kc, cap, ...) with an occupied
+    prefix of min(page_len, cap) per page). The tiered KV store uses
+    this to park/transfer pages at per-page granularity."""
+    out: Dict[str, str] = {}
+    for lo in _layouts():
+        for leaf in lo.pageable_leaves:
+            prev = out.setdefault(leaf, lo.page_len_leaf)
+            if prev != lo.page_len_leaf:
+                raise ValueError(
+                    f"conflicting page-length leaves for {leaf!r}: "
+                    f"{prev!r} vs {lo.page_len_leaf!r} ({lo.name!r})")
+    return out
 
 
 def _gaps(b: Backend, *, decode: bool, padded: bool,

@@ -54,12 +54,12 @@ _REPLICATED = {"vr", "vc", "scale", "bias", "router", "conv_w", "conv_b",
                "xgate_attn", "xgate_ffn", "count"}
 
 # Decode-cache head axes: attention-backend leaves declare theirs through
-# the repro.attn registry (Backend.cache_head_axes, pool coords
+# the repro.attn registry (CacheLayout.head_axes, pool coords
 # (G, B, head, ...)); the SSD recurrent state is the one non-attention
 # cache with a head axis and is appended here.
 def _cache_head_axes():
     from repro import attn
-    hints = dict(attn.cache_sharding_hints())
+    hints = dict(attn.cache_head_axes())
     hints["state"] = 2
     return hints
 

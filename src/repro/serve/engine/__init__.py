@@ -1,14 +1,18 @@
-"""Continuous-batching inference engine (DESIGN.md §5).
+"""Continuous-batching inference engine (DESIGN.md §5, §11).
 
 Public surface:
   InferenceEngine, Request      — request lifecycle + step loop
+  SessionHandle                 — what submit() returns: uid + state +
+                                  park()/resume()/cancel()
   SamplingParams                — per-request decode sampling knobs
   FCFSScheduler                 — admission / backpressure policy
   EngineMetrics                 — TTFT / throughput / occupancy counters
   init_pool, write_slot, reset_slot, read_slot — slot-pooled cache lanes
+  (the tiered KV store behind the pool lives in repro.serve.kvstore)
 """
-from repro.serve.engine.engine import (DECODE, FINISHED, PREFILL, WAITING,
-                                       InferenceEngine, Request)
+from repro.serve.engine.engine import (CANCELLED, DECODE, FINISHED, PARKED,
+                                       PREFILL, WAITING, InferenceEngine,
+                                       Request, SessionHandle)
 from repro.serve.engine.metrics import EngineMetrics, RequestStats
 from repro.serve.engine.pool import (init_pool, read_slot, reset_slot,
                                      write_slot)
@@ -17,8 +21,8 @@ from repro.serve.engine.sampling import (SamplingParams, request_key,
 from repro.serve.engine.scheduler import FCFSScheduler
 
 __all__ = [
-    "InferenceEngine", "Request", "SamplingParams", "FCFSScheduler",
-    "EngineMetrics", "RequestStats", "init_pool", "write_slot", "reset_slot",
-    "read_slot", "request_key", "sample_tokens",
-    "WAITING", "PREFILL", "DECODE", "FINISHED",
+    "InferenceEngine", "Request", "SessionHandle", "SamplingParams",
+    "FCFSScheduler", "EngineMetrics", "RequestStats", "init_pool",
+    "write_slot", "reset_slot", "read_slot", "request_key", "sample_tokens",
+    "WAITING", "PREFILL", "DECODE", "FINISHED", "PARKED", "CANCELLED",
 ]

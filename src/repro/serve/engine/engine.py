@@ -6,13 +6,21 @@ Request lifecycle::
     PREFILL --first token sampled, lane written--> DECODE
     DECODE  --eos_id / max_new_tokens----------->  FINISHED (lane reset,
                                                    slot returned to pool)
+    DECODE  --park (preempted / time-sliced / handle.park())--> PARKED
+    PARKED  --readmitted, lane streamed back----> DECODE (any free slot)
 
 Each engine ``step()``:
 
-  1. admit: pop FCFS-admittable requests and prefill each into a free lane
-     (one jitted prefill per request at its exact prompt length — distinct
-     lengths compile once and are cached by jit). The first output token is
-     sampled from the prefill logits.
+  1. admit: pop admittable requests (priority-then-FCFS) and place each
+     into a free lane — fresh requests prefill (one jitted prefill per
+     request at its exact prompt length; distinct lengths compile once
+     and are cached by jit), parked requests stream their saved lane back
+     from the KV store. When slots are full, the admission path parks the
+     lowest-priority active session (or time-slices the oldest one) to
+     the tiered KV store instead of blocking, so sessions ≫ slots all
+     make progress. The first output token of a fresh request is sampled
+     from the prefill logits; with a PrefixCache attached, an exact
+     prompt match skips the model call entirely.
   2. decode: ONE jitted ``serve_step`` over ALL pool slots with a per-slot
      active mask — free/finished lanes are exact no-ops, so requests at
      different positions, prompt lengths, and sampling settings share the
@@ -22,7 +30,8 @@ Each engine ``step()``:
 
 Because every lane is computed independently and sampling keys are
 counter-based per request, a request's outputs are bit-identical no matter
-which slot it occupies or who its co-tenants are (tested).
+which slot it occupies, who its co-tenants are, or how many park/resume
+round-trips it took (tested).
 """
 from __future__ import annotations
 
@@ -40,14 +49,17 @@ from repro.obs import JsonlSink, pages_health
 from repro.obs import routing_stats as obs_rt
 from repro.obs.trace import span
 from repro.serve.engine.metrics import EngineMetrics
-from repro.serve.engine.pool import init_pool, reset_slot, write_slot
+from repro.serve.engine.pool import (init_pool, read_slot, reset_slot,
+                                     write_slot)
 from repro.serve.engine.scheduler import FCFSScheduler
 from repro.serve.engine.sampling import (SamplingParams, request_base_key,
                                          request_key, sample_tokens)
+from repro.serve.kvstore import KVStore, PrefixCache
 from repro.serve.serving import (decode_backends, init_cache,
                                  make_serve_step, prefill)
 
 WAITING, PREFILL, DECODE, FINISHED = "WAITING", "PREFILL", "DECODE", "FINISHED"
+PARKED, CANCELLED = "PARKED", "CANCELLED"
 
 
 @dataclass
@@ -58,6 +70,7 @@ class Request:
     eos_id: Optional[int] = None
     sampling: SamplingParams = field(default_factory=SamplingParams)
     arrival_step: int = 0       # engine step at which the request shows up
+    priority: int = 0           # higher admits first and preempts lower
     state: str = WAITING
     output: List[int] = field(default_factory=list)
 
@@ -66,12 +79,72 @@ class Request:
         return len(self.prompt)
 
 
+class SessionHandle:
+    """What ``Engine.submit`` returns: uid + state + park/resume/cancel.
+
+    ``int(handle)`` is the uid, so existing uid-keyed code (metrics,
+    output maps, PRNG streams) interoperates unchanged.
+    """
+
+    def __init__(self, engine: "InferenceEngine", request: Request):
+        self._engine = engine
+        self._request = request
+
+    @property
+    def uid(self) -> int:
+        return self._request.uid
+
+    def __int__(self) -> int:
+        return self._request.uid
+
+    __index__ = __int__
+
+    @property
+    def state(self) -> str:
+        return {WAITING: "queued", PREFILL: "active", DECODE: "active",
+                PARKED: "parked", FINISHED: "finished",
+                CANCELLED: "cancelled"}[self._request.state]
+
+    @property
+    def output(self) -> List[int]:
+        return list(self._request.output)
+
+    def park(self) -> None:
+        """Evict this session's lane to the KV store and hold it (it will
+        not be rescheduled until ``resume()``)."""
+        self._engine.park_session(self.uid)
+
+    def resume(self) -> None:
+        """Requeue a held (parked) session for readmission."""
+        self._engine.resume_session(self.uid)
+
+    def cancel(self) -> None:
+        self._engine.cancel_session(self.uid)
+
+    def __repr__(self) -> str:
+        return f"SessionHandle(uid={self.uid}, state={self.state!r})"
+
+
 @dataclass
 class _Slot:
     request: Request
     pos: int                    # next decode position (= tokens in context)
     last_token: int
     base_key: np.ndarray        # request_base_key, host-side
+    admit_seq: int = 0          # monotonic placement order (rotation age)
+    tokens_at_admit: int = 0    # len(output) when (re)placed — time-slice
+
+
+@dataclass
+class _ParkedMeta:
+    """Host-side decode state of a parked session (the lane itself lives
+    in the KV store). ``pos is None`` marks a session parked before
+    prefill — resuming it is a plain (re)prefill."""
+    request: Request
+    pos: Optional[int] = None
+    last_token: int = 0
+    base_key: Optional[np.ndarray] = None
+    held: bool = False          # user-parked: stays out until resume()
 
 
 def _make_decode_sample(cfg: ModelConfig, mesh=None):
@@ -109,7 +182,10 @@ class InferenceEngine:
                  max_len: int, token_budget: Optional[int] = None,
                  record_logits: bool = False, mesh=None,
                  obs_jsonl: Optional[str] = None,
-                 routing_stats: bool = False):
+                 routing_stats: bool = False,
+                 kvstore: Optional[KVStore] = None,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 time_slice: Optional[int] = None):
         if routing_stats:
             # flip the static stats flag so prefill forwards compute the
             # routing-health aux (decode-side health comes from the
@@ -169,9 +245,20 @@ class InferenceEngine:
         self.step_count = 0
         self.record_logits = record_logits
         self.logits_trace: Dict[int, List[np.ndarray]] = {}
+        # tiered KV store: where parked sessions live (host tier by
+        # default; StoreConfig adds disk spill)
+        self.kvstore = kvstore if kvstore is not None else KVStore()
+        self.prefix_cache = prefix_cache
+        # time_slice: decode steps a session may hold a slot while others
+        # wait; None = run to completion (park only on priority preemption
+        # or an explicit handle.park())
+        self.time_slice = time_slice
+        self._parked: Dict[int, _ParkedMeta] = {}
+        self._admit_seq = 0
+        self._rotated_this_step = False
 
     # -- request intake ----------------------------------------------------
-    def submit(self, request: Request) -> None:
+    def submit(self, request: Request) -> SessionHandle:
         if request.prompt_len < 1 or request.max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens>=1")
         reserved = request.prompt_len + request.max_new_tokens
@@ -191,15 +278,17 @@ class InferenceEngine:
                 f"request {request.uid} already has output; submit a fresh "
                 f"Request (e.g. dataclasses.replace(r, output=[]))")
         if (self.scheduler.has_uid(request.uid)
+                or request.uid in self._parked
                 or any(s is not None and s.request.uid == request.uid
                        for s in self.slots)):
             raise ValueError(
-                f"request uid {request.uid} is already queued or active; "
-                f"uids key outputs, metrics, and PRNG streams")
+                f"request uid {request.uid} is already queued, parked, or "
+                f"active; uids key outputs, metrics, and PRNG streams")
         request.state = WAITING
         self.scheduler.submit(request)
         self.metrics.on_submit(request.uid, request.prompt_len,
                                self.step_count)
+        return SessionHandle(self, request)
 
     # -- slot accounting ---------------------------------------------------
     def free_slot_ids(self) -> List[int]:
@@ -220,47 +309,221 @@ class InferenceEngine:
             jnp.asarray([sp.top_p], jnp.float32))
         return int(tok[0])
 
+    # -- park / resume -----------------------------------------------------
+    def _tokens_since_admit(self, s: _Slot) -> int:
+        return len(s.request.output) - s.tokens_at_admit
+
+    def _park_slot(self, slot: int, *, held: bool) -> None:
+        """Evict ``slot``'s session: lane to the KV store, slot freed.
+
+        ``held=False`` requeues the session immediately (preemption /
+        rotation); ``held=True`` keeps it out until ``resume_session``.
+        """
+        s = self.slots[slot]
+        uid = s.request.uid
+        t0 = time.perf_counter()
+        with span("engine/park"):
+            lane = read_slot(self.pool, slot)
+            ps = self.kvstore.park(uid, lane)
+            self.pool = reset_slot(self.pool, slot)
+        dt = time.perf_counter() - t0
+        s.request.state = PARKED
+        self._parked[uid] = _ParkedMeta(s.request, pos=s.pos,
+                                        last_token=s.last_token,
+                                        base_key=s.base_key, held=held)
+        self.slots[slot] = None
+        self.metrics.on_park(uid, self.step_count)
+        if not held:
+            self.scheduler.submit(s.request)
+        if self._sink is not None:
+            self._sink.emit("kvstore_park", step=self.step_count, uid=uid,
+                            metrics={"park_s": dt,
+                                     "bytes": float(ps.nbytes),
+                                     "tokens": float(s.pos)})
+
+    def _resume_into(self, slot: int, req: Request) -> None:
+        """Stream a parked session's lane back into ``slot`` (bit-exact
+        with a never-evicted run: the lane round-trips byte-identical and
+        sampling keys are counter-based per uid, not per slot)."""
+        meta = self._parked.pop(req.uid)
+        t0 = time.perf_counter()
+        with span("engine/resume"):
+            lane = self.kvstore.resume(req.uid)
+            self.pool = write_slot(self.pool, slot, lane)
+        dt = time.perf_counter() - t0
+        req.state = DECODE
+        self.slots[slot] = _Slot(
+            req, pos=meta.pos, last_token=meta.last_token,
+            base_key=meta.base_key, admit_seq=self._admit_seq,
+            tokens_at_admit=len(req.output))
+        self._admit_seq += 1
+        self.metrics.on_resume(req.uid, slot, self.step_count)
+        if self._sink is not None:
+            self._sink.emit("kvstore_resume", step=self.step_count,
+                            uid=req.uid,
+                            metrics={"resume_s": dt, "slot": float(slot),
+                                     "tokens": float(meta.pos)})
+
+    def _maybe_park_for(self, head: Request) -> bool:
+        """Try to free capacity for the queue head by parking one active
+        session; True iff a park happened that makes ``head`` admittable."""
+        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return False
+        need = FCFSScheduler.reserved_tokens(head)
+        budget = self.scheduler.token_budget
+        free_now = len(self.free_slot_ids())
+
+        def admits_after(victim: _Slot) -> bool:
+            tif = (self.tokens_in_flight()
+                   - FCFSScheduler.reserved_tokens(victim.request))
+            return budget is None or tif + need <= budget
+
+        # 1. priority preemption: the lowest-priority session strictly
+        # below the head's priority gives up its slot
+        lower = [(s.request.priority, s.admit_seq, i, s)
+                 for i, s in active if s.request.priority < head.priority]
+        if lower:
+            _, _, i, s = min(lower)
+            if admits_after(s):
+                self._park_slot(i, held=False)
+                return True
+        # 2. time-slice rotation: with every slot busy and peers (at the
+        # head's priority or below) waiting, the longest-admitted session
+        # that has used up its slice rotates out — at most once per step,
+        # so a solo session never thrashes
+        if (self.time_slice is not None and free_now == 0
+                and not self._rotated_this_step):
+            eligible = [(s.admit_seq, i, s) for i, s in active
+                        if (self._tokens_since_admit(s) >= self.time_slice
+                            and s.request.priority <= head.priority)]
+            if eligible:
+                _, i, s = min(eligible)
+                if admits_after(s):
+                    self._rotated_this_step = True
+                    self._park_slot(i, held=False)
+                    return True
+        return False
+
+    def park_session(self, uid: int) -> None:
+        """Explicitly park a session (handle.park()): active sessions
+        evict their lane and are *held*; queued sessions are pulled from
+        the queue and held without a lane."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.request.uid == uid:
+                self._park_slot(i, held=True)
+                return
+        req = self.scheduler.remove(uid)
+        if req is not None:
+            req.state = PARKED
+            self._parked[uid] = _ParkedMeta(req, held=True)
+            return
+        if uid in self._parked:
+            self._parked[uid].held = True
+            return
+        raise ValueError(f"session {uid} is not active or queued")
+
+    def resume_session(self, uid: int) -> None:
+        """Requeue a held session for readmission (its lane streams back
+        on placement)."""
+        meta = self._parked.get(uid)
+        if meta is None:
+            raise ValueError(f"session {uid} is not parked")
+        if meta.held:
+            meta.held = False
+            self.scheduler.submit(meta.request)
+
+    def cancel_session(self, uid: int) -> None:
+        """Drop a session wherever it is (queue, slot, or KV store)."""
+        req = self.scheduler.remove(uid)
+        if req is not None and uid not in self._parked:
+            req.state = CANCELLED
+            return
+        meta = self._parked.pop(uid, None)
+        if meta is not None:
+            if uid in self.kvstore:
+                self.kvstore.drop(uid)
+            meta.request.state = CANCELLED
+            return
+        for i, s in enumerate(self.slots):
+            if s is not None and s.request.uid == uid:
+                self.pool = reset_slot(self.pool, i)
+                self.slots[i] = None
+                s.request.state = CANCELLED
+                return
+        raise ValueError(f"session {uid} is not queued, parked, or active")
+
     # -- lifecycle steps ---------------------------------------------------
     def _admit_and_prefill(self) -> None:
         while True:
-            free = self.free_slot_ids()
-            if not free:
+            head = self.scheduler.peek()
+            if head is None:
                 return
+            free = self.free_slot_ids()
+            if not self.scheduler.admittable(head, len(free),
+                                             self.tokens_in_flight()):
+                if not self._maybe_park_for(head):
+                    return
+                free = self.free_slot_ids()
             req = self.scheduler.next_admittable(len(free),
                                                 self.tokens_in_flight())
             if req is None:
                 return
-            self._prefill_into(free[0], req)
+            self._place(free[0], req)
+
+    def _place(self, slot: int, req: Request) -> None:
+        meta = self._parked.get(req.uid)
+        if meta is not None and meta.pos is not None:
+            self._resume_into(slot, req)
+        else:
+            self._parked.pop(req.uid, None)     # held-before-prefill
+            self._prefill_into(slot, req)
 
     def _prefill_into(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         req.state = PREFILL
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        with span("engine/prefill"):
-            res = self._prefill(self.params, self.kstate,
-                                self._fresh_lane, {"tokens": toks})
-        logits, lane = res[0], res[1]
-        if self.routing_stats and len(res) > 2:
-            summ = jax.device_get(obs_rt.summarize(res[2]))
-            self._last_routing = {k: float(v) for k, v in summ.items()}
-            if self._sink is not None:
-                self._sink.emit("engine_prefill", metrics=self._last_routing,
-                                step=self.step_count, uid=req.uid,
-                                prompt_len=req.prompt_len)
+        hit = (self.prefix_cache.get(req.prompt)
+               if self.prefix_cache is not None else None)
+        if hit is not None:
+            # exact-prompt hit: the shared read-only lane + stored logits
+            # row stand in for the model call; write_slot copies the lane
+            # into the pool, so the shared pages are never aliased
+            lane, last_row = hit
+            last_logits = jnp.asarray(last_row)
+        else:
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            with span("engine/prefill"):
+                res = self._prefill(self.params, self.kstate,
+                                    self._fresh_lane, {"tokens": toks})
+            logits, lane = res[0], res[1]
+            last_logits = logits[:, -1]
+            if self.routing_stats and len(res) > 2:
+                summ = jax.device_get(obs_rt.summarize(res[2]))
+                self._last_routing = {k: float(v) for k, v in summ.items()}
+                if self._sink is not None:
+                    self._sink.emit("engine_prefill",
+                                    metrics=self._last_routing,
+                                    step=self.step_count, uid=req.uid,
+                                    prompt_len=req.prompt_len)
+            if self.prefix_cache is not None:
+                self.prefix_cache.put(req.prompt, lane,
+                                      np.asarray(last_logits))
         self.pool = write_slot(self.pool, slot, lane)
-        tok = self._sample_first(req, logits[:, -1])
+        tok = self._sample_first(req, last_logits)
         dt = time.perf_counter() - t0
         req.state = DECODE
         req.output.append(tok)
         if self.record_logits:
             self.logits_trace.setdefault(req.uid, []).append(
-                np.asarray(logits[0, -1]))
+                np.asarray(last_logits[0]))
         self.metrics.on_prefill(req.uid, slot, self.step_count,
                                 req.prompt_len, dt)
         self.metrics.on_token(req.uid)
         self.slots[slot] = _Slot(
             req, pos=req.prompt_len, last_token=tok,
-            base_key=np.asarray(request_base_key(req.sampling, req.uid)))
+            base_key=np.asarray(request_base_key(req.sampling, req.uid)),
+            admit_seq=self._admit_seq, tokens_at_admit=0)
+        self._admit_seq += 1
         if self._is_finished(req, tok):
             self._retire(slot)
 
@@ -327,6 +590,7 @@ class InferenceEngine:
 
     def step(self) -> None:
         """One engine iteration: admit + prefill, then one decode step."""
+        self._rotated_this_step = False
         with span("engine/admit"):
             self._admit_and_prefill()
         with span("engine/decode"):
@@ -345,8 +609,12 @@ class InferenceEngine:
         metrics: Dict[str, float] = {
             "active_slots": float(active.sum()),
             "queued": float(len(self.scheduler)),
+            "parked": float(len(self._parked)),
             "decode_steps": float(self.metrics.decode_steps),
         }
+        metrics.update(self.kvstore.stats())
+        if self.prefix_cache is not None:
+            metrics.update(self.prefix_cache.stats())
         # fetch only the (tiny) rlen occupancy leaves, never the pages
         rlens = [leaf for path, leaf
                  in jax.tree_util.tree_flatten_with_path(self.pool)[0]

@@ -36,6 +36,8 @@ class RequestStats:
     finish_step: Optional[int] = None
     finish_time: Optional[float] = None
     n_generated: int = 0
+    parks: int = 0                          # times parked to the KV store
+    resumes: int = 0                        # times resumed from it
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -93,6 +95,14 @@ class EngineMetrics:
     def on_token(self, uid: int) -> None:
         self.requests[uid].n_generated += 1
 
+    def on_park(self, uid: int, step: int) -> None:
+        self.requests[uid].parks += 1
+
+    def on_resume(self, uid: int, slot: int, step: int) -> None:
+        r = self.requests[uid]
+        r.resumes += 1
+        r.slot = slot
+
     def on_finish(self, uid: int, step: int) -> None:
         r = self.requests[uid]
         r.finish_step = step
@@ -131,6 +141,8 @@ class EngineMetrics:
             "mean_occupancy": self.mean_occupancy,
             "mean_ttft_s": self.mean_ttft_s(),
             "prefill_tokens": self.prefill_tokens,
+            "parks": sum(r.parks for r in self.requests.values()),
+            "resumes": sum(r.resumes for r in self.requests.values()),
         }
         for hname, h in (("ttft", self._ttft), ("itl", self._itl),
                          ("decode_step", self._decode_step)):

@@ -16,6 +16,12 @@ state). On top of that layout this module provides jitted lane primitives:
                                  immediately reusable
   read_slot(pool, slot)        — extract lane ``slot`` as a B=1 cache
 
+write_slot/read_slot validate structure before touching the jitted
+update: the src treedef, per-leaf trailing shapes (which encode max_len
+and page capacity), and leaf dtypes must all agree with the pool — a
+mismatched lane raises instead of being silently cast/resized into the
+pool, where it would corrupt decode far from the call site.
+
 Free/busy bookkeeping lives python-side in the engine; the pool itself is a
 pure pytree that flows through jit. ``slot`` may be a traced scalar.
 """
@@ -24,8 +30,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import attn as attn_api
 from repro.configs.base import ModelConfig
-from repro.serve.serving import cache_reset_value, init_cache
+from repro.serve.serving import init_cache
 
 
 def init_pool(cfg: ModelConfig, max_slots: int, max_len: int, mesh=None):
@@ -42,24 +49,102 @@ def _leaf_name(path) -> str:
     return ""
 
 
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _check_slot(pool, slot) -> None:
+    """Bounds-check a concrete slot index (traced slots pass through)."""
+    if isinstance(slot, jax.core.Tracer):
+        return
+    max_slots = jax.tree_util.tree_leaves(pool)[0].shape[1]
+    s = int(slot)
+    if not 0 <= s < max_slots:
+        raise ValueError(
+            f"slot {s} out of range for a pool of {max_slots} lanes")
+
+
+def _check_lane(pool, src) -> None:
+    """Validate a B=1 lane against the pool before the jitted update.
+
+    Catches treedef mismatches, max_len / page-capacity disagreement
+    (trailing shapes), wrong batch axis, and leaf-dtype drift — each of
+    which ``p.at[:, slot].set(s[:, 0].astype(p.dtype))`` would formerly
+    absorb silently (cast) or surface as an opaque broadcast error deep
+    inside jit.
+    """
+    p_paths, p_tree = jax.tree_util.tree_flatten_with_path(pool)
+    s_paths, s_tree = jax.tree_util.tree_flatten_with_path(src)
+    if p_tree != s_tree:
+        raise ValueError(
+            f"lane cache structure does not match the pool: pool treedef "
+            f"{p_tree} vs src treedef {s_tree}")
+    for (path, p), (_, s) in zip(p_paths, s_paths):
+        name = _path_str(path)
+        if s.ndim != p.ndim:
+            raise ValueError(
+                f"cache leaf {name}: rank mismatch — pool {p.shape} vs "
+                f"src {s.shape}")
+        if s.shape[0] != p.shape[0]:
+            raise ValueError(
+                f"cache leaf {name}: scan-group axis mismatch — pool "
+                f"{p.shape[0]} groups vs src {s.shape[0]}")
+        if s.shape[1] != 1:
+            raise ValueError(
+                f"cache leaf {name}: expected a B=1 lane, got batch axis "
+                f"{s.shape[1]} (shape {s.shape})")
+        if s.shape[2:] != p.shape[2:]:
+            raise ValueError(
+                f"cache leaf {name}: trailing shape mismatch (max_len / "
+                f"page capacity disagreement) — pool {p.shape[2:]} vs src "
+                f"{s.shape[2:]}")
+        if s.dtype != p.dtype:
+            raise ValueError(
+                f"cache leaf {name}: dtype mismatch — pool {p.dtype} vs "
+                f"src {s.dtype}; build the lane with the pool's dtype "
+                f"instead of relying on a silent cast")
+
+
 @jax.jit
+def _write_slot_jit(pool, slot, src):
+    return jax.tree.map(lambda p, s: p.at[:, slot].set(s[:, 0]), pool, src)
+
+
 def write_slot(pool, slot, src):
-    """Copy the single-lane cache ``src`` (B=1, same max_len) into ``slot``."""
-    return jax.tree.map(
-        lambda p, s: p.at[:, slot].set(s[:, 0].astype(p.dtype)), pool, src)
+    """Copy the single-lane cache ``src`` (B=1, same max_len) into ``slot``.
+
+    Raises ValueError on treedef / shape / dtype disagreement before the
+    jitted update runs.
+    """
+    _check_lane(pool, src)
+    _check_slot(pool, slot)
+    return _write_slot_jit(pool, slot, src)
 
 
 @jax.jit
-def reset_slot(pool, slot):
-    """Reset lane ``slot`` to its init state (reusable, no reallocation)."""
+def _reset_slot_jit(pool, slot):
+    # per-leaf reset values come from each backend's typed CacheLayout;
+    # resolved at trace time (python ints), baked into the jitted update
+    fills = attn_api.cache_reset_values()
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: leaf.at[:, slot].set(
-            jnp.asarray(cache_reset_value(_leaf_name(path)), leaf.dtype)),
+            jnp.asarray(fills.get(_leaf_name(path), 0), leaf.dtype)),
         pool)
 
 
+def reset_slot(pool, slot):
+    """Reset lane ``slot`` to its init state (reusable, no reallocation)."""
+    _check_slot(pool, slot)
+    return _reset_slot_jit(pool, slot)
+
+
 @jax.jit
-def read_slot(pool, slot):
-    """Lane ``slot`` as a B=1 cache (parity tests / debugging)."""
+def _read_slot_jit(pool, slot):
     return jax.tree.map(
         lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=1), pool)
+
+
+def read_slot(pool, slot):
+    """Lane ``slot`` as a B=1 cache (parity tests / park / debugging)."""
+    _check_slot(pool, slot)
+    return _read_slot_jit(pool, slot)

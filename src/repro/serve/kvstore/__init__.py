@@ -1,0 +1,18 @@
+"""repro.serve.kvstore — tiered KV store behind the slot pool (§11).
+
+Two tiers below the device pool:
+
+  host    parked sessions live as numpy pytrees (cluster pages stored
+          compacted: only the occupied prefix of each page, per the
+          backend CacheLayout's pageable_leaves/page_len_leaf)
+  disk    optional npz spill once the host tier exceeds its byte limit
+          (dtype-proof uint8 views, so bf16 lanes round-trip bit-exact)
+
+Public surface:
+  KVStore, StoreConfig, ParkedSession — park(uid, lane) / resume(uid)
+  PrefixCache                         — hash-keyed shared prompt pages
+"""
+from repro.serve.kvstore.prefix import PrefixCache
+from repro.serve.kvstore.store import KVStore, ParkedSession, StoreConfig
+
+__all__ = ["KVStore", "StoreConfig", "ParkedSession", "PrefixCache"]

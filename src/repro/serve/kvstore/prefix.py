@@ -1,0 +1,92 @@
+"""Hash-keyed prefix cache: shared prompts fill their cache lane once.
+
+Keys are the SHA-1 of the *full* token prompt. This is deliberate — for
+routing caches a partial-prefix continuation is not bit-exact: prefill
+fills cluster pages with balanced top-k membership while decode routes
+each token to its argmax page only, so teacher-forcing the tail of a
+prompt over a shorter cached prefix produces different hidden states
+than prefilling the whole prompt (DESIGN.md §11). Exact full-prompt
+keying keeps every hit byte-identical to a miss, which is what the
+engine's bit-parity contract requires; the win is the common serving
+shape where many sessions share one system/task prompt verbatim.
+
+An entry is the prefilled B=1 lane plus the last-position logits row
+(so the hit path samples the first output token without running the
+model), both held as read-only numpy (``writeable=False``) — entries
+are shared by reference across sessions, and ``write_slot`` copies them
+into the pool, so a hit never aliases device state.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.obs import Registry
+
+
+def _freeze(x: np.ndarray) -> np.ndarray:
+    x = np.ascontiguousarray(x)
+    x.setflags(write=False)
+    return x
+
+
+class PrefixCache:
+    """LRU map: SHA-1(prompt tokens) -> (read-only lane, last logits row)."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError("PrefixCache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[str, Tuple[object, np.ndarray]]" = \
+            OrderedDict()
+        self.obs = Registry()
+        self._hits = self.obs.counter("kvstore/prefix_hits")
+        self._misses = self.obs.counter("kvstore/prefix_misses")
+
+    @staticmethod
+    def key(prompt: Sequence[int]) -> str:
+        return hashlib.sha1(
+            np.asarray(prompt, np.int64).tobytes()).hexdigest()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, prompt: Sequence[int]
+            ) -> Optional[Tuple[object, np.ndarray]]:
+        """(lane, last_logits_row) for an exact prompt match, else None."""
+        k = self.key(prompt)
+        hit = self._entries.get(k)
+        if hit is None:
+            self._misses.inc()
+            return None
+        self._entries.move_to_end(k)
+        self._hits.inc()
+        return hit
+
+    def put(self, prompt: Sequence[int], lane, last_logits) -> None:
+        """Store the prefilled ``lane`` + ``last_logits`` (1, V) row."""
+        k = self.key(prompt)
+        if k in self._entries:
+            self._entries.move_to_end(k)
+            return
+        host_lane = jax.tree.map(lambda x: _freeze(np.asarray(x)), lane)
+        self._entries[k] = (host_lane, _freeze(np.asarray(last_logits)))
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self._hits.value + self._misses.value
+        return self._hits.value / n if n else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "kvstore/prefix_entries": float(len(self._entries)),
+            "kvstore/prefix_hits": self._hits.value,
+            "kvstore/prefix_misses": self._misses.value,
+            "kvstore/prefix_hit_rate": self.hit_rate,
+        }

@@ -1,0 +1,278 @@
+"""Host/disk KV store: park a slot's cache lane off-device, resume it
+bit-exact into any free slot (DESIGN.md §11).
+
+``park(uid, lane)`` takes the B=1 pytree ``read_slot`` extracts and moves
+it to the host tier; ``resume(uid)`` hands back a pytree ``write_slot``
+accepts, with every leaf byte-identical to what was parked. Between the
+two, storage is cut two ways:
+
+  per-page compaction   cluster-paged leaves ((G, B, H, kc, cap, dh),
+                        declared by each backend CacheLayout's
+                        ``pageable_leaves``) keep only the occupied
+                        prefix of each page — ``min(page_len, cap)``
+                        slots per (head, cluster). Unoccupied page slots
+                        are zeros by construction (fresh lanes are
+                        zeroed, prefill writes only kept slots, decode
+                        appends one slot at a time, reset re-zeros), so
+                        dropping them and re-zeroing on resume is
+                        bit-exact. Short sessions park at a fraction of
+                        the full lane footprint.
+  disk spill            beyond ``host_bytes_limit`` the least-recently
+                        parked sessions spill to npz under ``spill_dir``
+                        as uint8 views (bf16/ml_dtypes round-trip safely
+                        through the raw bytes) and are reloaded on
+                        resume.
+
+Device→host transfers start async (``copy_to_host_async``) across all
+leaves before the first blocking read, so lane leaves overlap on the
+interconnect. Metrics (park/resume latency histograms, bytes moved,
+spill counts) live in a ``repro.obs.Registry`` owned by the store; the
+engine folds ``stats()`` into its ``engine_tick`` records.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import attn as attn_api
+from repro.obs import Registry
+
+
+@dataclass(frozen=True)
+class StoreConfig:
+    """Knobs for the tiered store.
+
+    ``spill_dir``        directory for the disk tier (None = host only;
+                         with a byte limit but no dir, over-limit parks
+                         raise instead of silently growing)
+    ``host_bytes_limit`` soft cap on resident parked bytes — exceeding
+                         it spills least-recently-parked sessions
+    ``compact_pages``    per-page compaction of cluster-paged leaves
+                         (disable only for debugging round-trips)
+    """
+
+    spill_dir: Optional[str] = None
+    host_bytes_limit: Optional[int] = None
+    compact_pages: bool = True
+
+
+@dataclass
+class _LeafRec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    data: Optional[np.ndarray]          # None while spilled to disk
+    page_len_key: Optional[str] = None  # set => data is the compacted
+    #                                     occupied-prefix values
+
+
+@dataclass
+class ParkedSession:
+    uid: int
+    treedef: Any
+    order: List[str]                    # leaf keys in flatten order
+    leaves: Dict[str, _LeafRec] = field(default_factory=dict)
+    nbytes: int = 0                     # host bytes (compacted)
+    parked_at: float = 0.0
+    spill_path: Optional[str] = None    # set while on the disk tier
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return ""
+
+
+def _sibling_key(path, name: str) -> str:
+    sib = tuple(path[:-1]) + (jax.tree_util.DictKey(name),)
+    return jax.tree_util.keystr(sib)
+
+
+def _occupied(rlen: np.ndarray, cap: int) -> np.ndarray:
+    """(..., cap) bool mask of occupied ring slots per cluster page."""
+    return np.arange(cap) < np.minimum(rlen, cap)[..., None]
+
+
+class KVStore:
+    """Tiered (host + optional disk) store of parked session lanes."""
+
+    def __init__(self, config: StoreConfig = StoreConfig()):
+        self.config = config
+        self._sessions: Dict[int, ParkedSession] = {}
+        self.obs = Registry()
+        self._park_s = self.obs.histogram("kvstore/park_s")
+        self._resume_s = self.obs.histogram("kvstore/resume_s")
+        self._parks = self.obs.counter("kvstore/parks")
+        self._resumes = self.obs.counter("kvstore/resumes")
+        self._to_host = self.obs.counter("kvstore/bytes_to_host")
+        self._to_dev = self.obs.counter("kvstore/bytes_to_device")
+        self._spilled_b = self.obs.counter("kvstore/bytes_spilled")
+        self._spills = self.obs.counter("kvstore/spills")
+        if config.spill_dir:
+            os.makedirs(config.spill_dir, exist_ok=True)
+
+    # -- inventory ---------------------------------------------------------
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._sessions
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(s.nbytes for s in self._sessions.values()
+                   if s.spill_path is None)
+
+    def drop(self, uid: int) -> None:
+        s = self._sessions.pop(uid, None)
+        if s is not None and s.spill_path and os.path.exists(s.spill_path):
+            os.remove(s.spill_path)
+
+    # -- park --------------------------------------------------------------
+    def park(self, uid: int, lane) -> ParkedSession:
+        """Move the B=1 cache ``lane`` to the host tier under ``uid``."""
+        if uid in self._sessions:
+            raise ValueError(f"session {uid} is already parked")
+        t0 = time.perf_counter()
+        flat, treedef = jax.tree_util.tree_flatten_with_path(lane)
+        for _, leaf in flat:                    # overlap device→host
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        host = {jax.tree_util.keystr(p): np.asarray(v) for p, v in flat}
+        pageable = (attn_api.pageable_cache_leaves()
+                    if self.config.compact_pages else {})
+        sess = ParkedSession(uid=uid, treedef=treedef,
+                             order=[jax.tree_util.keystr(p) for p, _ in flat],
+                             parked_at=t0)
+        for path, _ in flat:
+            key = jax.tree_util.keystr(path)
+            arr = host[key]
+            name = _leaf_name(path)
+            if name in pageable:
+                rlen_key = _sibling_key(path, pageable[name])
+                if rlen_key in host:
+                    occ = _occupied(host[rlen_key], arr.shape[-2])
+                    sess.leaves[key] = _LeafRec(arr.shape, arr.dtype,
+                                                np.ascontiguousarray(arr[occ]),
+                                                page_len_key=rlen_key)
+                    continue
+            sess.leaves[key] = _LeafRec(arr.shape, arr.dtype,
+                                        np.ascontiguousarray(arr))
+        sess.nbytes = sum(r.data.nbytes for r in sess.leaves.values())
+        self._sessions[uid] = sess
+        self._enforce_limit()
+        dt = time.perf_counter() - t0
+        self._park_s.record(dt)
+        self._parks.inc()
+        self._to_host.inc(sess.nbytes)
+        self.obs.gauge("kvstore/host_bytes").set(self.host_bytes)
+        self.obs.gauge("kvstore/sessions").set(len(self._sessions))
+        return sess
+
+    # -- resume ------------------------------------------------------------
+    def resume(self, uid: int):
+        """Rebuild ``uid``'s lane (bit-exact) and remove it from the store.
+
+        Returns a host pytree in the exact structure/dtypes ``write_slot``
+        validates against the pool; the jitted write streams it back to
+        the device.
+        """
+        sess = self._sessions.get(uid)
+        if sess is None:
+            raise KeyError(f"no parked session {uid}")
+        t0 = time.perf_counter()
+        if sess.spill_path is not None:
+            self._load_spill(sess)
+        # pass 1: full (non-compacted) leaves — includes every page_len
+        # leaf the compacted ones need
+        full: Dict[str, np.ndarray] = {
+            k: r.data for k, r in sess.leaves.items()
+            if r.page_len_key is None}
+        # pass 2: re-expand compacted cluster pages against their rlen
+        for key, rec in sess.leaves.items():
+            if rec.page_len_key is None:
+                continue
+            out = np.zeros(rec.shape, rec.dtype)
+            occ = _occupied(full[rec.page_len_key], rec.shape[-2])
+            out[occ] = rec.data
+            full[key] = out
+        lane = jax.tree_util.tree_unflatten(
+            sess.treedef, [full[k] for k in sess.order])
+        del self._sessions[uid]
+        if sess.spill_path and os.path.exists(sess.spill_path):
+            os.remove(sess.spill_path)
+        dt = time.perf_counter() - t0
+        self._resume_s.record(dt)
+        self._resumes.inc()
+        self._to_dev.inc(sess.nbytes)
+        self.obs.gauge("kvstore/host_bytes").set(self.host_bytes)
+        self.obs.gauge("kvstore/sessions").set(len(self._sessions))
+        return lane
+
+    # -- disk tier ---------------------------------------------------------
+    def _enforce_limit(self) -> None:
+        limit = self.config.host_bytes_limit
+        if limit is None:
+            return
+        resident = [(s.parked_at, s) for s in self._sessions.values()
+                    if s.spill_path is None]
+        resident.sort(key=lambda x: x[0])
+        total = sum(s.nbytes for _, s in resident)
+        while total > limit and resident:
+            _, victim = resident.pop(0)
+            if self.config.spill_dir is None:
+                raise RuntimeError(
+                    f"host tier over host_bytes_limit ({total} > {limit} "
+                    f"bytes) and no spill_dir configured")
+            self._spill(victim)
+            total -= victim.nbytes
+
+    def _spill(self, sess: ParkedSession) -> None:
+        path = os.path.join(self.config.spill_dir,
+                            f"kv_session_{sess.uid}.npz")
+        # uint8 views: np.savez would mangle ml_dtypes (bf16) leaves; the
+        # true dtype/shape stay in the in-memory _LeafRec metadata
+        np.savez(path, **{f"a{i}": sess.leaves[k].data.view(np.uint8)
+                          for i, k in enumerate(sess.order)})
+        for k in sess.order:
+            sess.leaves[k].data = None
+        sess.spill_path = path
+        self._spills.inc()
+        self._spilled_b.inc(sess.nbytes)
+
+    def _load_spill(self, sess: ParkedSession) -> None:
+        with np.load(sess.spill_path) as z:
+            for i, k in enumerate(sess.order):
+                rec = sess.leaves[k]
+                raw = z[f"a{i}"]
+                flat = raw.view(rec.dtype)
+                if rec.page_len_key is None:
+                    rec.data = flat.reshape(rec.shape)
+                else:           # compacted: (n_occupied, dh)
+                    rec.data = flat.reshape(-1, rec.shape[-1])
+        os.remove(sess.spill_path)
+        sess.spill_path = None
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Flat float map for engine_tick metrics."""
+        out = {
+            "kvstore/sessions": float(len(self._sessions)),
+            "kvstore/host_bytes": float(self.host_bytes),
+            "kvstore/parks": self._parks.value,
+            "kvstore/resumes": self._resumes.value,
+            "kvstore/bytes_to_host": self._to_host.value,
+            "kvstore/bytes_to_device": self._to_dev.value,
+            "kvstore/spills": self._spills.value,
+            "kvstore/bytes_spilled": self._spilled_b.value,
+        }
+        for name, h in (("park", self._park_s), ("resume", self._resume_s)):
+            if h.count:
+                out[f"kvstore/{name}_p50_s"] = h.percentile(50)
+                out[f"kvstore/{name}_p99_s"] = h.percentile(99)
+        return out

@@ -41,14 +41,9 @@ from repro.models import ssm as ssm_mod
 from repro.models.transformer import build_segments, where_active
 
 
-def cache_reset_value(leaf_name: str) -> int:
-    """Initial/reset fill value for a named cache leaf. Attention-backend
-    leaves declare theirs through the registry (Backend.cache_fill);
-    every leaf not listed resets to 0. The slot pool
-    (serve/engine/pool.py) uses this to return a freed lane to its
-    just-initialized state without reallocation."""
-    return attn_api.cache_fill_values().get(leaf_name, 0)
-
+# Per-leaf reset values now live on each backend's typed CacheLayout
+# (attn.cache_reset_values() aggregates them); the old free function
+# serving.cache_reset_value was removed with the stringly cache API.
 
 # ---------------------------------------------------------------------------
 # Cache init
@@ -97,7 +92,8 @@ def decode_backends(cfg: ModelConfig, mesh=None) -> Dict[str, str]:
             if s.kind in ("attn", "moe"):
                 b = attn_api.decode_backend(spec_for_layer(cfg, s.attn),
                                             mesh=mesh)
-                out[s.attn] = f"{b.name}({b.caps.cache_layout})"
+                layout = b.layout.name if b.layout is not None else "-"
+                out[s.attn] = f"{b.name}({layout})"
     return out
 
 
@@ -199,7 +195,7 @@ def make_serve_step(cfg: ModelConfig, mesh=None):
 # ---------------------------------------------------------------------------
 # Prefill: forward pass that also fills the caches. The fill itself is
 # cache-layout math, so the registered decode backend owns it
-# (Backend.prefill_fill via attn.prefill_cache).
+# (CacheLayout.fill via attn.prefill_cache).
 # ---------------------------------------------------------------------------
 def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions, mesh=None):
     """Build one layer's cache from prefix activations h (B,N,d)."""

@@ -9,9 +9,11 @@ unregistered or untested.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro import attn as A
+from repro.attn import registry
 from repro.attn.registry import Backend, Capabilities
 from repro.configs.base import ModelConfig, RoutingConfig
 from repro.core.kmeans import init_kmeans
@@ -147,7 +149,9 @@ def test_decode_cache_coherent(variant):
     spec = _spec(variant)
     q, k, v, mu = _inputs(spec, n=32)
     b = A.decode_backend(spec)
-    assert b.caps.cache_layout in ("pages", "ring+pages")
+    assert b.layout.name in ("pages", "ring+pages")
+    # deprecation shim: the old string field mirrors the typed layout
+    assert b.caps.cache_layout == b.layout.name
     cache = A.init_decode_cache(spec, 2, 32, jnp.float32)
     for t in range(32):
         pos = jnp.full((2,), t, jnp.int32)
@@ -314,13 +318,48 @@ def test_builtin_pallas_backends_are_differentiable():
 
 
 def test_every_backend_declares_consistent_hints():
-    hints = A.cache_sharding_hints()
+    hints = A.cache_head_axes()
     for b in A.registered():
         if b.caps.supports_decode:
-            cache = b.init_cache(_spec(b.variant), 1, 32, jnp.float32)
+            cache = b.layout.init(_spec(b.variant), 1, 32, jnp.float32)
             for leaf, arr in cache.items():
                 ax = hints.get(leaf)
                 assert ax is None or arr.ndim >= ax, (b.name, leaf)
+
+
+def test_cache_layout_protocol():
+    """The typed CacheLayout answers every layout question in one object:
+    init/fill callables, reset values, head axes, pageable structure, and
+    allocation-free lane-byte accounting."""
+    for b in A.registered():
+        if not b.caps.supports_decode:
+            continue
+        lo = b.layout
+        spec = _spec(b.variant)
+        cache = lo.init(spec, 1, 32, jnp.float32)
+        nbytes = lo.lane_bytes(spec, 32, jnp.float32)
+        assert nbytes == sum(np.prod(a.shape) * a.dtype.itemsize
+                             for a in cache.values()), b.name
+        for leaf in lo.pageable_leaves:         # pages are (…, kc, cap, dh)
+            assert cache[leaf].ndim >= 4, (b.name, leaf)
+            assert lo.page_len_leaf in cache, b.name
+        for leaf, val in lo.reset_values.items():
+            assert bool((cache[leaf] == val).all()), (b.name, leaf)
+        # deprecated Backend accessors still delegate to the layout
+        assert b.init_cache is lo.init and b.prefill_fill is lo.fill
+        assert b.cache_head_axes == lo.head_axes
+
+
+def test_register_rejects_contradictory_layout_string():
+    """A backend whose deprecated caps.cache_layout string disagrees with
+    its typed layout is a registration error, not a silent shadowing."""
+    lo = A.CacheLayout(name="append", init=lambda *a: {}, fill=lambda *a: {})
+    with pytest.raises(ValueError, match="contradicts"):
+        registry.register(Backend(
+            variant="full", impl="_test_badlayout",
+            apply=lambda *a, **k: None, layout=lo,
+            caps=Capabilities(cache_layout="ring")))
+    A.unregister("full", "_test_badlayout")
 
 
 # ---------------------------------------------------------------------------

@@ -191,6 +191,137 @@ def test_sampled_outputs_independent_of_co_tenants(model):
     assert outs[0] == outs[1]
 
 
+# ---------------------------------------------------------------------------
+# Park / resume via the tiered KV store (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+def test_park_resume_bit_parity_different_slot(model):
+    """A routing-head session parked mid-decode and resumed into a
+    *different* slot produces the identical token stream — and
+    bit-identical per-step logits — as an uninterrupted run."""
+    params, kstate = model
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(0, CFG.vocab_size, size=13).tolist()
+    mk = lambda: Request(uid=99, prompt=list(prompt), max_new_tokens=7)
+
+    eng_ref = InferenceEngine(CFG, params, kstate, max_slots=2,
+                              max_len=MAX_LEN, record_logits=True)
+    out_ref = eng_ref.run([mk()])
+
+    eng = InferenceEngine(CFG, params, kstate, max_slots=2, max_len=MAX_LEN,
+                          record_logits=True)
+    h = eng.submit(mk())
+    eng.step()
+    eng.step()
+    assert h.state == "active" and eng.metrics.requests[99].slot == 0
+    assert 0 < len(h.output) < 7                    # genuinely mid-decode
+    h.park()
+    assert h.state == "parked" and 99 in eng.kvstore
+    # a tenant takes over slot 0 while 99 is parked
+    eng.submit(Request(uid=1, prompt=rng.randint(
+        0, CFG.vocab_size, size=6).tolist(), max_new_tokens=9))
+    eng.step()
+    assert eng.slots[0] is not None and eng.slots[0].request.uid == 1
+    h.resume()
+    while eng.has_work():
+        eng.step()
+    assert h.state == "finished"
+    assert eng.metrics.requests[99].slot == 1       # resumed elsewhere
+    assert 99 not in eng.kvstore                    # lane reclaimed
+    assert h.output == out_ref[99] == _solo_reference(params, kstate, mk())
+    la, lb = eng.logits_trace[99], eng_ref.logits_trace[99]
+    assert len(la) == len(lb) == 7
+    for a, b in zip(la, lb):
+        assert np.array_equal(a, b)                 # BIT-identical
+    summ = eng.metrics.summary()
+    assert summ["parks"] == 1 and summ["resumes"] == 1
+
+
+def test_sixteen_sessions_over_four_slots_bit_exact(model):
+    """Acceptance: 16 concurrent sessions complete through a 4-slot pool
+    via time-slice park/resume, every token stream identical to a
+    16-slot run that never evicts."""
+    params, kstate = model
+    big = InferenceEngine(CFG, params, kstate, max_slots=16, max_len=MAX_LEN)
+    out_big = big.run(_mk_requests(n=16, arrival_every_other=False))
+    assert big.metrics.summary()["parks"] == 0      # never evicts
+
+    small = InferenceEngine(CFG, params, kstate, max_slots=4,
+                            max_len=MAX_LEN, time_slice=2)
+    out_small = small.run(_mk_requests(n=16, arrival_every_other=False))
+    assert out_small == out_big
+    summ = small.metrics.summary()
+    assert summ["parks"] > 0 and summ["resumes"] > 0
+    assert all(s is None for s in small.slots)      # pool drained
+    assert len(small.kvstore) == 0                  # store drained
+
+
+def test_priority_preemption_parks_lowest(model):
+    """max_slots=1: a priority-5 arrival preempts the running priority-0
+    session, which parks, later resumes, and still finishes bit-exact."""
+    params, kstate = model
+    rng = np.random.RandomState(7)
+    low = Request(uid=0, prompt=rng.randint(
+        0, CFG.vocab_size, size=8).tolist(), max_new_tokens=12)
+    high = Request(uid=1, prompt=rng.randint(
+        0, CFG.vocab_size, size=6).tolist(), max_new_tokens=4, priority=5)
+    eng = InferenceEngine(CFG, params, kstate, max_slots=1, max_len=MAX_LEN)
+    eng.submit(low)
+    eng.step()
+    eng.step()
+    assert low.state == "DECODE"
+    eng.submit(high)
+    eng.step()
+    assert low.state == "PARKED" and high.state == "DECODE"
+    while eng.has_work():
+        eng.step()
+    assert low.state == high.state == "FINISHED"
+    assert list(low.output) == _solo_reference(params, kstate, low)
+    assert list(high.output) == _solo_reference(params, kstate, high)
+    assert eng.metrics.summary()["parks"] >= 1
+
+
+def test_prefix_cache_hit_matches_miss(model):
+    """Two sessions sharing one prompt: the second prefill is a cache hit
+    (lane written from the store, no model call) yet yields the identical
+    token stream and bit-identical logits."""
+    from repro.serve.kvstore import PrefixCache
+    params, kstate = model
+    rng = np.random.RandomState(21)
+    prompt = rng.randint(0, CFG.vocab_size, size=14).tolist()
+    pc = PrefixCache()
+    eng = InferenceEngine(CFG, params, kstate, max_slots=2, max_len=MAX_LEN,
+                          prefix_cache=pc, record_logits=True)
+    r_miss = Request(uid=0, prompt=list(prompt), max_new_tokens=6)
+    r_hit = Request(uid=1, prompt=list(prompt), max_new_tokens=6,
+                    arrival_step=5)     # arrives after the miss prefilled
+    out = eng.run([r_miss, r_hit])
+    assert pc.stats()["kvstore/prefix_hits"] == 1.0
+    assert pc.stats()["kvstore/prefix_misses"] == 1.0
+    assert out[0] == out[1] == _solo_reference(params, kstate, r_miss)
+    for a, b in zip(eng.logits_trace[0], eng.logits_trace[1]):
+        assert np.array_equal(a, b)
+
+
+def test_session_handle_lifecycle_and_interop(model):
+    """submit() returns a SessionHandle: queued→active→finished states,
+    int(handle) interop with uid-keyed maps, cancel of a queued session."""
+    params, kstate = model
+    eng = InferenceEngine(CFG, params, kstate, max_slots=1, max_len=MAX_LEN)
+    h1 = eng.submit(Request(uid=7, prompt=[3, 4, 5], max_new_tokens=3))
+    h2 = eng.submit(Request(uid=8, prompt=[5, 6, 7], max_new_tokens=3))
+    assert int(h1) == 7 and h1.uid == 7
+    assert h1.state == h2.state == "queued"
+    eng.step()
+    assert h1.state == "active" and h2.state == "queued"
+    h2.cancel()
+    assert h2.state == "cancelled"
+    while eng.has_work():
+        eng.step()
+    assert h1.state == "finished" and len(h1.output) == 3
+    assert h2.output == []
+    assert eng.metrics.requests[int(h1)].uid == 7   # __index__ interop
+
+
 @pytest.mark.slow
 def test_engine_on_mesh_matches_single_device():
     """Same request stream, 1-device placement vs a 4x2 ("data","model")

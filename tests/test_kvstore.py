@@ -1,0 +1,209 @@
+"""Tiered KV store: bit-exact park/resume round trips (host + disk,
+compacted cluster pages), prefix-cache behavior, and pool-write
+validation (the read/write_slot satellite).
+
+The bit-exactness contract is the load-bearing one: a resumed lane must
+be byte-identical to the parked lane, leaf for leaf, or the engine's
+park/resume decode parity (tests/test_engine.py) silently degrades into
+a numerics lottery.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, RoutingConfig
+from repro.models.model import init_model
+from repro.serve.engine import init_pool, read_slot, write_slot
+from repro.serve.kvstore import KVStore, PrefixCache, StoreConfig
+from repro.serve.serving import init_cache, prefill
+
+CFG = ModelConfig(name="kvs", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  attention="local+routing",
+                  routing=RoutingConfig(num_clusters=4, local_window=8),
+                  dtype="float32")
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    return init_model(CFG, jax.random.PRNGKey(0))
+
+
+def _prefilled_lane(model, n=11, max_len=MAX_LEN, cfg=CFG):
+    params, kstate = model
+    lane = init_cache(cfg, 1, max_len)
+    toks = jnp.arange(n, dtype=jnp.int32)[None] % cfg.vocab_size
+    _, lane = prefill(params, kstate, lane, {"tokens": toks}, cfg)
+    return lane
+
+
+def _assert_tree_equal(a, b):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (_, lb) in zip(fa, fb):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype, pa
+        assert np.array_equal(la, lb), jax.tree_util.keystr(pa)
+
+
+# ---------------------------------------------------------------------------
+# Host-tier round trips
+# ---------------------------------------------------------------------------
+def test_park_resume_roundtrip_bitexact(model):
+    """Park -> resume reproduces every leaf byte-identically, including
+    compacted cluster pages re-expanded against their rlen tables."""
+    lane = _prefilled_lane(model)
+    store = KVStore()
+    store.park(7, lane)
+    assert 7 in store and len(store) == 1
+    back = store.resume(7)
+    _assert_tree_equal(lane, back)
+    assert 7 not in store and len(store) == 0
+
+
+def test_page_compaction_shrinks_short_sessions(model):
+    """A short prompt occupies a fraction of the cluster-page capacity;
+    the parked footprint must reflect that, and disabling compaction must
+    store the full lane."""
+    lane = _prefilled_lane(model, n=6)
+    full_bytes = sum(np.asarray(x).nbytes
+                     for x in jax.tree_util.tree_leaves(lane))
+    compact = KVStore().park(1, lane)
+    assert compact.nbytes < full_bytes
+    raw = KVStore(StoreConfig(compact_pages=False)).park(1, lane)
+    assert raw.nbytes == full_bytes
+    # and the uncompacted round trip is bit-exact too
+    store = KVStore(StoreConfig(compact_pages=False))
+    store.park(2, lane)
+    _assert_tree_equal(lane, store.resume(2))
+
+
+def test_park_duplicate_and_resume_missing_raise(model):
+    lane = _prefilled_lane(model)
+    store = KVStore()
+    store.park(1, lane)
+    with pytest.raises(ValueError, match="already parked"):
+        store.park(1, lane)
+    with pytest.raises(KeyError):
+        store.resume(99)
+    store.drop(1)
+    assert 1 not in store
+
+
+# ---------------------------------------------------------------------------
+# Disk tier
+# ---------------------------------------------------------------------------
+def test_disk_spill_roundtrip_bitexact(model, tmp_path):
+    """host_bytes_limit=1 forces every park straight to npz; the resumed
+    lane is still byte-identical (uint8-view storage is dtype-proof) and
+    the spill file is reclaimed."""
+    lane = _prefilled_lane(model)
+    store = KVStore(StoreConfig(spill_dir=str(tmp_path), host_bytes_limit=1))
+    store.park(3, lane)
+    spilled = list(tmp_path.glob("kv_session_*.npz"))
+    assert len(spilled) == 1
+    assert store.stats()["kvstore/spills"] == 1.0
+    _assert_tree_equal(lane, store.resume(3))
+    assert list(tmp_path.glob("kv_session_*.npz")) == []
+
+
+def test_spill_is_lru_and_respects_limit(model, tmp_path):
+    """Oldest parked session spills first once the host tier overflows."""
+    lane = _prefilled_lane(model)
+    nbytes = KVStore().park(0, lane).nbytes
+    store = KVStore(StoreConfig(spill_dir=str(tmp_path),
+                                host_bytes_limit=2 * nbytes))
+    for uid in (1, 2):
+        store.park(uid, lane)
+    assert store.stats()["kvstore/spills"] == 0.0
+    store.park(3, lane)                     # overflows: uid 1 spills
+    assert store._sessions[1].spill_path is not None
+    assert store._sessions[2].spill_path is None
+    assert store.host_bytes <= 2 * nbytes
+    for uid in (1, 2, 3):
+        _assert_tree_equal(lane, store.resume(uid))
+
+
+def test_over_limit_without_spill_dir_raises(model):
+    lane = _prefilled_lane(model)
+    store = KVStore(StoreConfig(host_bytes_limit=1))
+    with pytest.raises(RuntimeError, match="spill_dir"):
+        store.park(1, lane)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache
+# ---------------------------------------------------------------------------
+def test_prefix_cache_exact_hit_and_lru(model):
+    lane = _prefilled_lane(model)
+    row = np.zeros((1, CFG.vocab_size), np.float32)
+    pc = PrefixCache(capacity=2)
+    assert pc.get([1, 2, 3]) is None                # miss counted
+    pc.put([1, 2, 3], lane, row)
+    hit = pc.get([1, 2, 3])
+    assert hit is not None
+    _assert_tree_equal(lane, hit[0])
+    assert pc.get([1, 2]) is None                   # prefix != exact key
+    pc.put([4], lane, row)
+    pc.get([1, 2, 3])                               # refresh LRU order
+    pc.put([5], lane, row)                          # evicts [4]
+    assert pc.get([4]) is None and pc.get([5]) is not None
+    assert 0.0 < pc.hit_rate < 1.0
+    # entries are read-only: a consumer cannot corrupt the shared pages
+    leaf = jax.tree_util.tree_leaves(hit[0])[0]
+    with pytest.raises(ValueError):
+        leaf[...] = 0
+
+
+# ---------------------------------------------------------------------------
+# write_slot / read_slot validation (satellite)
+# ---------------------------------------------------------------------------
+def test_write_slot_rejects_wrong_max_len(model):
+    pool = init_pool(CFG, 2, MAX_LEN)
+    short = _prefilled_lane(model, n=5, max_len=MAX_LEN // 2)
+    with pytest.raises(ValueError, match="max_len|trailing"):
+        write_slot(pool, 0, short)
+
+
+def test_write_slot_rejects_dtype_mismatch(model):
+    """A bf16 lane into an fp32 pool used to be silently .astype-cast;
+    it must now raise before the jitted update."""
+    pool = init_pool(CFG, 2, MAX_LEN)
+    lane = _prefilled_lane(model)
+    wrong = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if x.dtype == jnp.float32 else x, lane)
+    with pytest.raises(ValueError, match="dtype"):
+        write_slot(pool, 0, wrong)
+
+
+def test_write_slot_rejects_non_single_lane_and_structure(model):
+    pool = init_pool(CFG, 2, MAX_LEN)
+    lane = _prefilled_lane(model)
+    wide = jax.tree.map(lambda x: np.concatenate([np.asarray(x)] * 2, 1),
+                        lane)
+    with pytest.raises(ValueError, match="B=1"):
+        write_slot(pool, 0, wide)
+    broken = [{g: {k: v for k, v in leaves.items() if k != "rlen"}
+               for g, leaves in seg.items()} for seg in lane]
+    with pytest.raises(ValueError, match="structure"):
+        write_slot(pool, 0, broken)
+
+
+def test_slot_index_bounds_checked(model):
+    pool = init_pool(CFG, 2, MAX_LEN)
+    lane = _prefilled_lane(model)
+    with pytest.raises(ValueError, match="out of range"):
+        write_slot(pool, 2, lane)
+    with pytest.raises(ValueError, match="out of range"):
+        read_slot(pool, -1)
+
+
+def test_valid_write_still_works_and_roundtrips(model):
+    pool = init_pool(CFG, 2, MAX_LEN)
+    lane = _prefilled_lane(model)
+    pool = write_slot(pool, 1, lane)
+    _assert_tree_equal(lane, read_slot(pool, 1))

@@ -78,12 +78,13 @@ def workload_max_len(requests: List[Request]) -> int:
 
 def run_continuous(cfg, params, kstate, requests, max_slots: int,
                    max_len: int, warmup: bool = True,
-                   obs_jsonl: str = None
+                   obs_jsonl: str = None, chunked_prefill: int = None
                    ) -> Tuple[Dict[int, List[int]], dict]:
     from repro.serve.engine.metrics import EngineMetrics
     eng = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
                           max_len=max_len, obs_jsonl=obs_jsonl,
-                          routing_stats=bool(obs_jsonl))
+                          routing_stats=bool(obs_jsonl),
+                          chunked_prefill=chunked_prefill)
     if warmup:
         # compile the fused decode step outside the measured run (jit
         # caches are per-engine; a cold first step would dominate timing)
@@ -93,6 +94,11 @@ def run_continuous(cfg, params, kstate, requests, max_slots: int,
         eng.step_count = 0
     outputs = eng.run(requests)
     summary = eng.metrics.summary()
+    # observability riders: which backend each attention variant's decode
+    # resolved to (registry-dependent: pallas_paged on TPU, xla elsewhere)
+    # and whether prefill ran depth-chunked
+    summary["decode_backends"] = dict(eng.attn_backends)
+    summary["chunked_prefill"] = chunked_prefill
     eng.close()
     return outputs, summary
 
@@ -162,7 +168,15 @@ def main(argv=None) -> None:
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax profiler trace of the continuous "
                          "run into this directory")
+    ap.add_argument("--chunked-prefill", type=int, default=2, metavar="N",
+                    help="depth stages advanced per engine step (prefill "
+                         "interleaves with decode); 0 = monolithic prefill "
+                         "at admission. The default of 2 covers the smoke "
+                         "model's full depth per step, so occupancy matches "
+                         "monolithic prefill while the chunked path is "
+                         "exercised end-to-end")
     args = ap.parse_args(argv)
+    chunked = args.chunked_prefill if args.chunked_prefill > 0 else None
 
     if args.smoke:
         cfg, params, kstate = build_model(num_layers=2, d_model=128,
@@ -183,9 +197,12 @@ def main(argv=None) -> None:
     with obs_profile(args.profile_dir):
         out_cb, cb = run_continuous(cfg, params, kstate,
                                     clone_requests(requests), max_slots,
-                                    max_len, obs_jsonl=args.obs_jsonl)
+                                    max_len, obs_jsonl=args.obs_jsonl,
+                                    chunked_prefill=chunked)
     match = all(out_cb[u] == out_ls[u] for u in out_cb)
     print(f"outputs identical across schedulers: {match}")
+    print(f"decode backends: {cb['decode_backends']}; "
+          f"chunked_prefill={cb['chunked_prefill']}")
 
     print("name,us_per_call,derived")
     for name, stats in (("lockstep", ls), ("continuous", cb)):
@@ -208,6 +225,8 @@ def main(argv=None) -> None:
                   "params_m": cfg.param_count() / 1e6,
                   "n_requests": len(requests), "max_slots": max_slots,
                   "max_len": max_len, "outputs_identical": match,
+                  "decode_backends": cb["decode_backends"],
+                  "chunked_prefill": cb["chunked_prefill"],
                   # None, not NaN: strict JSON parsers reject bare NaN
                   "speedup_tokens_per_s": (speedup if speedup == speedup
                                            else None),

@@ -19,6 +19,7 @@ matrix in tests/test_attn_registry.py. See DESIGN.md §8.
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -45,7 +46,13 @@ class AttnOutput(NamedTuple):
 
 
 def _platform(platform: Optional[str]) -> str:
-    return platform or jax.default_backend()
+    """Resolution platform: explicit arg > REPRO_ATTN_PLATFORM env >
+    detected backend. The env override (paired with
+    REPRO_FORCE_INTERPRET=1, see kernels.common.default_interpret) lets
+    tests exercise TPU auto-selection — fused apply, paged decode — end
+    to end on a CPU host."""
+    return (platform or os.environ.get("REPRO_ATTN_PLATFORM")
+            or jax.default_backend())
 
 
 def _grad_guard(out, name):

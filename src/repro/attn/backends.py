@@ -16,15 +16,25 @@ Registered pairs (variant, impl):
                      membership via scalar prefetch — no (B,H,k,w,dh)
                      q/k/v intermediates in HBM (DESIGN.md §9); preferred
                      over routing/pallas on TPU (priority 20 vs 10)
+  routing/pallas_paged   fused apply + the paged-decode kernel
+                     (kernels.routing_decode): single-token decode DMAs
+                     only the selected cluster page into VMEM via
+                     scalar-prefetched page tables — decode is gather-
+                     free too, and resolves here on TPU (priority 20)
   local+routing/xla      paper head split, both halves reference
   local+routing/pallas   local half reference, routing blocks on Pallas
   local+routing/pallas_fused  local half reference, routing half fused
+  local+routing/pallas_paged  fused apply; decode = ring-local reference
+                     + paged routing kernel
 
 Every Pallas backend is differentiable (the kernels carry flash-style
 custom VJPs), so ``impl="pallas"``/``"pallas_fused"`` are legal on the
-train path; decode stays on the xla backends (the fused kernel has no
-single-token path — serving's cluster-paged routing decode is unchanged
-and keeps resolving to routing/xla).
+train path. Decode: the routing variants resolve to ``pallas_paged`` on
+TPU — token- and cache-trajectory bit-parity with the xla cluster-paged
+reference (the kernel shares the reference's routing + cache-write code
+and mirrors its attention op sequence; per-step outputs agree to float
+ulps, see kernels.routing_decode); full/local decode stays on the xla
+append/ring references (already gather-free).
 
 Rope is applied *here*, per variant: full/local heads are roped, routing
 heads are not (their routing vectors and shared-QK attention keys are
@@ -265,6 +275,33 @@ def _local_decode(spec, q, k, v, *, cache, pos, state=None, interpret=None):
     return o, {**cache, "lk": ck, "lv": cv, "lpos": cp}
 
 
+def _route_token(q, mu, cache):
+    """Stage 1 of cluster-paged decode, shared verbatim by the xla and
+    pallas_paged paths (so their cache trajectories are identical by
+    construction): normalize the token's routing vector, argmax it
+    against the centroids, read the selected page's write counter."""
+    r = normalize_routing(q)[:, :, 0]      # (B,Hr,dh)
+    scores = jnp.einsum("bhd,hkd->bhk", r.astype(jnp.float32),
+                        mu.astype(jnp.float32))
+    c = jnp.argmax(scores, axis=-1)        # (B,Hr)
+    plen = jnp.take_along_axis(cache["rlen"], c[:, :, None], axis=2)[..., 0]
+    return r, c, plen
+
+
+def _write_page_slot(cache, r, v0, c, plen):
+    """Ring-overwrite the new token into slot plen % cap of page c —
+    the one cache write of a decode step, shared by both paths."""
+    B, Hr = c.shape
+    cap = cache["rk"].shape[3]
+    wslot = plen % cap
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(Hr)[None, :]
+    ck = cache["rk"].at[bi, hi, c, wslot].set(r.astype(cache["rk"].dtype))
+    cv = cache["rv"].at[bi, hi, c, wslot].set(v0.astype(cache["rv"].dtype))
+    cl = cache["rlen"].at[bi, hi, c].set(plen + 1)
+    return {**cache, "rk": ck, "rv": cv, "rlen": cl}
+
+
 def _routing_decode(spec, q, k, v, *, cache, pos, state=None,
                     interpret=None):
     """Cluster-paged routing decode: the token routes to its argmax
@@ -273,16 +310,12 @@ def _routing_decode(spec, q, k, v, *, cache, pos, state=None,
     heads and are expanded to the routing head count here."""
     mu = state
     v = _expand_kv(v, spec.q_per_kv)
-    B, Hr, _, dh = q.shape
-    kc, cap = cache["rk"].shape[2], cache["rk"].shape[3]
-    r = normalize_routing(q)[:, :, 0]      # (B,Hr,dh)
-    scores = jnp.einsum("bhd,hkd->bhk", r.astype(jnp.float32),
-                        mu.astype(jnp.float32))
-    c = jnp.argmax(scores, axis=-1)        # (B,Hr)
+    _, _, _, dh = q.shape
+    cap = cache["rk"].shape[3]
+    r, c, plen = _route_token(q, mu, cache)
     sel = c[:, :, None, None, None]
     page_k = jnp.take_along_axis(cache["rk"], sel, axis=2)[:, :, 0]
     page_v = jnp.take_along_axis(cache["rv"], sel, axis=2)[:, :, 0]
-    plen = jnp.take_along_axis(cache["rlen"], c[:, :, None], axis=2)[..., 0]
     nvalid = jnp.minimum(plen, cap)        # (B,Hr)
     logits = jnp.einsum("bhd,bhcd->bhc", r, page_k).astype(jnp.float32)
     logits = logits / jnp.sqrt(dh)
@@ -294,27 +327,45 @@ def _routing_decode(spec, q, k, v, *, cache, pos, state=None,
     attn = jax.nn.softmax(all_logits, axis=-1)
     vals = jnp.concatenate([page_v, v[:, :, 0][:, :, None, :]], 2)
     o = jnp.einsum("bhc,bhcd->bhd", attn.astype(vals.dtype), vals)
-    # write r, v into the ring slot of page c
-    wslot = plen % cap
-    bi = jnp.arange(B)[:, None]
-    hi = jnp.arange(Hr)[None, :]
-    ck = cache["rk"].at[bi, hi, c, wslot].set(r.astype(cache["rk"].dtype))
-    cv = cache["rv"].at[bi, hi, c, wslot].set(
-        v[:, :, 0].astype(cache["rv"].dtype))
-    cl = cache["rlen"].at[bi, hi, c].set(plen + 1)
-    return o[:, :, None, :], {**cache, "rk": ck, "rv": cv, "rlen": cl}
+    new_cache = _write_page_slot(cache, r, v[:, :, 0], c, plen)
+    return o[:, :, None, :], new_cache
 
 
-def _mixed_decode(spec, q, k, v, *, cache, pos, state=None, interpret=None):
-    (ql, kl, vl), (qr, _, vr) = _split_heads(spec, q, k, v)
-    ring = {n: cache[n] for n in ("lk", "lv", "lpos")}
-    o_l, ring = _local_decode(_local_subspec(spec), ql, kl, vl,
-                              cache=ring, pos=pos, interpret=interpret)
-    pages = {n: cache[n] for n in ("rk", "rv", "rlen")}
-    o_r, pages = _routing_decode(_routing_subspec(spec), qr, None, vr,
-                                 cache=pages, pos=pos, state=state,
-                                 interpret=interpret)
-    return jnp.concatenate([o_l, o_r], axis=1), {**ring, **pages}
+def _routing_decode_paged(spec, q, k, v, *, cache, pos, state=None,
+                          interpret=None):
+    """Paged-kernel routing decode: stage 1 and the ring-slot write are
+    the exact XLA code the reference runs; the page attention itself is
+    the Pallas kernel, which DMAs only the selected cluster page into
+    VMEM through scalar-prefetched page tables (kernels.routing_decode)
+    instead of materializing a gathered page copy in HBM."""
+    from repro.kernels.routing_decode import paged_routing_decode
+    mu = state
+    v = _expand_kv(v, spec.q_per_kv)
+    r, c, plen = _route_token(q, mu, cache)
+    o = paged_routing_decode(r, v[:, :, 0], cache["rk"], cache["rv"],
+                             cache["rlen"], c, interpret=interpret)
+    new_cache = _write_page_slot(cache, r, v[:, :, 0], c, plen)
+    return o[:, :, None, :], new_cache
+
+
+def _make_mixed_decode(routing_decode):
+    """local+routing decode: ring-local reference half + the given
+    routing decode fn (xla reference or the paged kernel)."""
+    def decode(spec, q, k, v, *, cache, pos, state=None, interpret=None):
+        (ql, kl, vl), (qr, _, vr) = _split_heads(spec, q, k, v)
+        ring = {n: cache[n] for n in ("lk", "lv", "lpos")}
+        o_l, ring = _local_decode(_local_subspec(spec), ql, kl, vl,
+                                  cache=ring, pos=pos, interpret=interpret)
+        pages = {n: cache[n] for n in ("rk", "rv", "rlen")}
+        o_r, pages = routing_decode(_routing_subspec(spec), qr, None, vr,
+                                    cache=pages, pos=pos, state=state,
+                                    interpret=interpret)
+        return jnp.concatenate([o_l, o_r], axis=1), {**ring, **pages}
+    return decode
+
+
+_mixed_decode = _make_mixed_decode(_routing_decode)
+_mixed_decode_paged = _make_mixed_decode(_routing_decode_paged)
 
 
 # ---------------------------------------------------------------------------
@@ -504,5 +555,29 @@ registry.register(Backend(
     variant="local+routing", impl="pallas_fused",
     apply=_make_mixed_apply("pallas_fused"), priority=20,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
+
+# paged decode: fused apply plus the paged-decode kernel, so the serving
+# hot path is Pallas too. Registered AFTER pallas_fused at the same
+# priority 20 on purpose: resolve() keeps the first max on a tie, so
+# apply calls still pick pallas_fused while decode (where fused declares
+# supports_decode=False) lands here instead of the priority-0 xla
+# reference. Shares the cluster-page layouts with xla — engines can
+# prefill under one impl and decode under the other, and decode under a
+# GSPMD mesh falls back to the reference like every Pallas backend.
+registry.register(Backend(
+    variant="routing", impl="pallas_paged",
+    apply=_make_routing_apply("pallas_fused"),
+    decode=_routing_decode_paged, layout=PAGES_LAYOUT, priority=20,
+    caps=Capabilities(supports_decode=True, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
+
+registry.register(Backend(
+    variant="local+routing", impl="pallas_paged",
+    apply=_make_mixed_apply("pallas_fused"),
+    decode=_mixed_decode_paged, layout=MIXED_LAYOUT, priority=20,
+    caps=Capabilities(supports_decode=True, supports_mesh=False,
                       supports_pad_mask=True, supports_grad=True,
                       needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))

@@ -13,6 +13,7 @@ Two things every kernel file needs:
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -31,8 +32,16 @@ def default_interpret(interpret: Optional[bool] = None,
     (compiled on TPU, interpret elsewhere); an explicit bool wins.
     ``platform`` overrides the detected backend (attn.attend passes the
     platform it resolved backends against) — this function is the single
-    source of the rule."""
+    source of the rule.
+
+    ``REPRO_FORCE_INTERPRET=1`` forces interpret mode for derived (None)
+    arguments: paired with ``REPRO_ATTN_PLATFORM=tpu`` it lets tests run
+    the full TPU backend-resolution path (fused apply + paged decode) on
+    a CPU host without crashing into Mosaic. Explicit bools still win.
+    """
     if interpret is None:
+        if os.environ.get("REPRO_FORCE_INTERPRET", "") not in ("", "0"):
+            return True
         return (platform or jax.default_backend()) != "tpu"
     return bool(interpret)
 

@@ -15,6 +15,15 @@ Contract (version 1) for every line a ``JsonlSink`` writes:
 Anything else at the top level must itself be a valid metric value.
 CI runs ``python -m repro.obs.schema file.jsonl ...`` after the obs-smoke
 train/serve runs and fails the job on the first malformed line.
+
+The CLI also takes whole-file ``.json`` records (the committed benchmark
+artifacts — ``BENCH_*.json``, ``*_smoke.json``): those are one
+pretty-printed JSON document, not schema-v1 event lines, so they are
+held to the *value* contract only — strict JSON (bare ``NaN`` /
+``Infinity`` rejected, which ``json.loads`` would otherwise accept),
+string keys, finite numbers all the way down. CI's docs-check step runs
+it over every committed record so a benchmark that starts emitting
+non-finite or non-portable JSON fails the push that introduced it.
 """
 from __future__ import annotations
 
@@ -101,14 +110,44 @@ def validate_jsonl(path: str) -> int:
     return n
 
 
+def _reject_constant(name: str):
+    raise SchemaError(f"non-finite constant {name} (strict JSON)")
+
+
+def validate_json_file(path: str) -> None:
+    """Validate a whole-file JSON record (committed bench artifact):
+    strict JSON with string keys and finite numbers throughout. Raises
+    SchemaError on the first violation."""
+    with open(path) as f:
+        try:
+            doc = json.load(f, parse_constant=_reject_constant)
+        except json.JSONDecodeError as e:
+            raise SchemaError(f"{path}: not JSON ({e})")
+        except SchemaError as e:
+            raise SchemaError(f"{path}: {e}")
+    try:
+        _check_value(doc, "$")
+    except SchemaError as e:
+        raise SchemaError(f"{path}: {e}")
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: python -m repro.obs.schema FILE.jsonl [...]",
+        print("usage: python -m repro.obs.schema FILE.{jsonl,json} [...]",
               file=sys.stderr)
         return 2
     status = 0
     for path in argv:
+        if path.endswith(".json"):
+            try:
+                validate_json_file(path)
+            except (OSError, SchemaError) as e:
+                print(f"FAIL {e}", file=sys.stderr)
+                status = 1
+                continue
+            print(f"{path}: whole-file record ok (strict JSON, finite)")
+            continue
         try:
             n = validate_jsonl(path)
         except (OSError, SchemaError) as e:

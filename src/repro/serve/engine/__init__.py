@@ -18,11 +18,14 @@ from repro.serve.engine.pool import (init_pool, read_slot, reset_slot,
                                      write_slot)
 from repro.serve.engine.sampling import (SamplingParams, request_key,
                                          sample_tokens)
-from repro.serve.engine.scheduler import FCFSScheduler
+from repro.serve.engine.scheduler import (PRIORITY_BATCH,
+                                          PRIORITY_INTERACTIVE,
+                                          PRIORITY_NORMAL, FCFSScheduler)
 
 __all__ = [
     "InferenceEngine", "Request", "SessionHandle", "SamplingParams",
     "FCFSScheduler", "EngineMetrics", "RequestStats", "init_pool",
     "write_slot", "reset_slot", "read_slot", "request_key", "sample_tokens",
     "WAITING", "PREFILL", "DECODE", "FINISHED", "PARKED", "CANCELLED",
+    "PRIORITY_BATCH", "PRIORITY_NORMAL", "PRIORITY_INTERACTIVE",
 ]

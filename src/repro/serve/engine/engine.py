@@ -4,6 +4,8 @@ Request lifecycle::
 
     WAITING --admit (free slot + token budget)--> PREFILL
     PREFILL --first token sampled, lane written--> DECODE
+    PREFILL --preempted mid-stages (chunked)----> PARKED (partial dropped,
+                                                  request requeued)
     DECODE  --eos_id / max_new_tokens----------->  FINISHED (lane reset,
                                                    slot returned to pool)
     DECODE  --park (preempted / time-sliced / handle.park())--> PARKED
@@ -11,21 +13,30 @@ Request lifecycle::
 
 Each engine ``step()``:
 
-  1. admit: pop admittable requests (priority-then-FCFS) and place each
-     into a free lane — fresh requests prefill (one jitted prefill per
-     request at its exact prompt length; distinct lengths compile once
-     and are cached by jit), parked requests stream their saved lane back
-     from the KV store. When slots are full, the admission path parks the
-     lowest-priority active session (or time-slices the oldest one) to
-     the tiered KV store instead of blocking, so sessions ≫ slots all
-     make progress. The first output token of a fresh request is sampled
-     from the prefill logits; with a PrefixCache attached, an exact
-     prompt match skips the model call entirely.
-  2. decode: ONE jitted ``serve_step`` over ALL pool slots with a per-slot
+  1. admit: pop admittable requests (priority-then-FCFS, see the named
+     PRIORITY_* classes in scheduler.py) and place each into a free
+     lane — fresh requests prefill (one jitted prefill per request at its
+     exact prompt length; distinct lengths compile once and are cached by
+     jit), parked requests stream their saved lane back from the KV
+     store. When slots are full, the admission path parks the
+     lowest-priority active session (preferring a mid-prefill job, which
+     has produced nothing yet and just requeues), or time-slices the
+     oldest one, to the tiered KV store instead of blocking, so sessions
+     ≫ slots all make progress. The first output token of a fresh request
+     is sampled from the prefill logits; with a PrefixCache attached, an
+     exact prompt match skips the model call entirely.
+  2. chunked prefill (``chunked_prefill=N``): admission only runs the
+     embed stage and enqueues a _PrefillJob; each step then advances at
+     most N depth stages (serving.make_prefill_stages, one scan group
+     per stage) across the outstanding jobs, oldest first, so a long
+     prompt's prefill interleaves with step 3 instead of head-of-line-
+     blocking active decodes. With ``chunked_prefill=None`` (default)
+     prefill completes at admission in one jitted call.
+  3. decode: ONE jitted ``serve_step`` over ALL pool slots with a per-slot
      active mask — free/finished lanes are exact no-ops, so requests at
      different positions, prompt lengths, and sampling settings share the
      batch. Per-slot sampling is a second jitted call.
-  3. retire: finished requests free their lane (``reset_slot``) so the next
+  4. retire: finished requests free their lane (``reset_slot``) so the next
      admission reuses it without reallocation.
 
 Because every lane is computed independently and sampling keys are
@@ -55,8 +66,10 @@ from repro.serve.engine.scheduler import FCFSScheduler
 from repro.serve.engine.sampling import (SamplingParams, request_base_key,
                                          request_key, sample_tokens)
 from repro.serve.kvstore import KVStore, PrefixCache
-from repro.serve.serving import (decode_backends, init_cache,
-                                 make_serve_step, prefill)
+from repro.serve.serving import (assemble_prefill_cache, decode_backends,
+                                 init_cache, make_prefill_stages,
+                                 make_serve_step, prefill,
+                                 slice_cache_groups)
 
 WAITING, PREFILL, DECODE, FINISHED = "WAITING", "PREFILL", "DECODE", "FINISHED"
 PARKED, CANCELLED = "PARKED", "CANCELLED"
@@ -136,6 +149,23 @@ class _Slot:
 
 
 @dataclass
+class _PrefillJob:
+    """A mid-flight chunked prefill occupying a pool slot: activations
+    after the last finished depth stage plus the cache chunks those
+    stages produced. Parking or preempting a job drops the partial work
+    and requeues the request — it has produced no tokens yet, so the
+    cheap exit is to redo the prefill on readmission."""
+    request: Request
+    x: jax.Array                # (1, N, d) activations entering stage_idx
+    positions: jax.Array
+    chunks: List = field(default_factory=list)   # per-stage cache chunks
+    stats: List = field(default_factory=list)    # per-stage routing stats
+    stage_idx: int = 0
+    admit_seq: int = 0
+    t0: float = 0.0             # wall-clock at admission (TTFT accounting)
+
+
+@dataclass
 class _ParkedMeta:
     """Host-side decode state of a parked session (the lane itself lives
     in the KV store). ``pos is None`` marks a session parked before
@@ -185,7 +215,8 @@ class InferenceEngine:
                  routing_stats: bool = False,
                  kvstore: Optional[KVStore] = None,
                  prefix_cache: Optional[PrefixCache] = None,
-                 time_slice: Optional[int] = None):
+                 time_slice: Optional[int] = None,
+                 chunked_prefill: Optional[int] = None):
         if routing_stats:
             # flip the static stats flag so prefill forwards compute the
             # routing-health aux (decode-side health comes from the
@@ -256,6 +287,24 @@ class InferenceEngine:
         self._parked: Dict[int, _ParkedMeta] = {}
         self._admit_seq = 0
         self._rotated_this_step = False
+        # chunked_prefill: max depth stages advanced per step() across the
+        # outstanding prefill jobs; None = prefill monolithically at
+        # admission (the stage functions below are then never built)
+        if chunked_prefill is not None and chunked_prefill < 1:
+            raise ValueError("chunked_prefill must be >= 1 stage per step")
+        self.chunked_prefill = chunked_prefill
+        self._prefill_jobs: Dict[int, _PrefillJob] = {}
+        if chunked_prefill is not None:
+            embed, stages, head = make_prefill_stages(cfg, mesh=mesh,
+                                                      groups_per_stage=1)
+            self._pf_embed = jax.jit(embed)
+            self._pf_head = jax.jit(head)
+            self._pf_stages = [(st, jax.jit(st.fn)) for st in stages]
+            # per-stage slices of the fresh B=1 lane — stages never mutate
+            # their cache argument, so these are shared across every job
+            self._pf_fresh = [
+                slice_cache_groups(self._fresh_lane[st.si], st.g0, st.g1)
+                for st in stages]
 
     # -- request intake ----------------------------------------------------
     def submit(self, request: Request) -> SessionHandle:
@@ -279,6 +328,8 @@ class InferenceEngine:
                 f"Request (e.g. dataclasses.replace(r, output=[]))")
         if (self.scheduler.has_uid(request.uid)
                 or request.uid in self._parked
+                or any(j.request.uid == request.uid
+                       for j in self._prefill_jobs.values())
                 or any(s is not None and s.request.uid == request.uid
                        for s in self.slots)):
             raise ValueError(
@@ -292,11 +343,14 @@ class InferenceEngine:
 
     # -- slot accounting ---------------------------------------------------
     def free_slot_ids(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is None]
+        return [i for i, s in enumerate(self.slots)
+                if s is None and i not in self._prefill_jobs]
 
     def tokens_in_flight(self) -> int:
-        return sum(FCFSScheduler.reserved_tokens(s.request)
-                   for s in self.slots if s is not None)
+        return (sum(FCFSScheduler.reserved_tokens(s.request)
+                    for s in self.slots if s is not None)
+                + sum(FCFSScheduler.reserved_tokens(j.request)
+                      for j in self._prefill_jobs.values()))
 
     # -- sampling ----------------------------------------------------------
     def _sample_first(self, req: Request, logits_row) -> int:
@@ -368,24 +422,35 @@ class InferenceEngine:
         """Try to free capacity for the queue head by parking one active
         session; True iff a park happened that makes ``head`` admittable."""
         active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
-        if not active:
+        if not active and not self._prefill_jobs:
             return False
         need = FCFSScheduler.reserved_tokens(head)
         budget = self.scheduler.token_budget
         free_now = len(self.free_slot_ids())
 
-        def admits_after(victim: _Slot) -> bool:
+        def admits_after(victim_req: Request) -> bool:
             tif = (self.tokens_in_flight()
-                   - FCFSScheduler.reserved_tokens(victim.request))
+                   - FCFSScheduler.reserved_tokens(victim_req))
             return budget is None or tif + need <= budget
 
         # 1. priority preemption: the lowest-priority session strictly
-        # below the head's priority gives up its slot
+        # below the head's priority gives up its slot. Mid-prefill jobs
+        # are the preferred victims — they have produced nothing yet, so
+        # dropping one costs a re-prefill instead of a lane round-trip
+        # through the KV store.
+        lower_jobs = [(j.request.priority, j.admit_seq, slot, j)
+                      for slot, j in self._prefill_jobs.items()
+                      if j.request.priority < head.priority]
+        if lower_jobs:
+            _, _, slot, j = min(lower_jobs)
+            if admits_after(j.request):
+                self._drop_prefill_job(slot, held=False)
+                return True
         lower = [(s.request.priority, s.admit_seq, i, s)
                  for i, s in active if s.request.priority < head.priority]
         if lower:
             _, _, i, s = min(lower)
-            if admits_after(s):
+            if admits_after(s.request):
                 self._park_slot(i, held=False)
                 return True
         # 2. time-slice rotation: with every slot busy and peers (at the
@@ -399,7 +464,7 @@ class InferenceEngine:
                             and s.request.priority <= head.priority)]
             if eligible:
                 _, i, s = min(eligible)
-                if admits_after(s):
+                if admits_after(s.request):
                     self._rotated_this_step = True
                     self._park_slot(i, held=False)
                     return True
@@ -412,6 +477,12 @@ class InferenceEngine:
         for i, s in enumerate(self.slots):
             if s is not None and s.request.uid == uid:
                 self._park_slot(i, held=True)
+                return
+        for slot, job in list(self._prefill_jobs.items()):
+            if job.request.uid == uid:
+                # mid-prefill: nothing to evict — drop the partial stages
+                # and hold the request; resume() re-prefills from scratch
+                self._drop_prefill_job(slot, held=True)
                 return
         req = self.scheduler.remove(uid)
         if req is not None:
@@ -451,6 +522,11 @@ class InferenceEngine:
                 self.slots[i] = None
                 s.request.state = CANCELLED
                 return
+        for slot, job in list(self._prefill_jobs.items()):
+            if job.request.uid == uid:
+                self._prefill_jobs.pop(slot)       # no lane written yet
+                job.request.state = CANCELLED
+                return
         raise ValueError(f"session {uid} is not queued, parked, or active")
 
     # -- lifecycle steps ---------------------------------------------------
@@ -489,25 +565,42 @@ class InferenceEngine:
             # row stand in for the model call; write_slot copies the lane
             # into the pool, so the shared pages are never aliased
             lane, last_row = hit
-            last_logits = jnp.asarray(last_row)
-        else:
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            with span("engine/prefill"):
-                res = self._prefill(self.params, self.kstate,
-                                    self._fresh_lane, {"tokens": toks})
-            logits, lane = res[0], res[1]
-            last_logits = logits[:, -1]
-            if self.routing_stats and len(res) > 2:
-                summ = jax.device_get(obs_rt.summarize(res[2]))
-                self._last_routing = {k: float(v) for k, v in summ.items()}
-                if self._sink is not None:
-                    self._sink.emit("engine_prefill",
-                                    metrics=self._last_routing,
-                                    step=self.step_count, uid=req.uid,
-                                    prompt_len=req.prompt_len)
-            if self.prefix_cache is not None:
-                self.prefix_cache.put(req.prompt, lane,
-                                      np.asarray(last_logits))
+            self._activate(slot, req, lane, jnp.asarray(last_row), t0)
+            return
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        if self.chunked_prefill is not None:
+            # enqueue a depth-staged job holding this slot; its stages run
+            # in _advance_prefill_jobs, interleaved with decode steps
+            x, positions = self._pf_embed(self.params, {"tokens": toks})
+            self._prefill_jobs[slot] = _PrefillJob(
+                req, x, positions, admit_seq=self._admit_seq, t0=t0)
+            self._admit_seq += 1
+            return
+        with span("engine/prefill"):
+            res = self._prefill(self.params, self.kstate,
+                                self._fresh_lane, {"tokens": toks})
+        logits, lane = res[0], res[1]
+        last_logits = logits[:, -1]
+        if self.routing_stats and len(res) > 2:
+            self._emit_prefill_stats(req, res[2])
+        if self.prefix_cache is not None:
+            self.prefix_cache.put(req.prompt, lane, np.asarray(last_logits))
+        self._activate(slot, req, lane, last_logits, t0)
+
+    def _emit_prefill_stats(self, req: Request, stats_tree) -> None:
+        summ = jax.device_get(obs_rt.summarize(stats_tree))
+        self._last_routing = {k: float(v) for k, v in summ.items()}
+        if self._sink is not None:
+            self._sink.emit("engine_prefill", metrics=self._last_routing,
+                            step=self.step_count, uid=req.uid,
+                            prompt_len=req.prompt_len)
+
+    def _activate(self, slot: int, req: Request, lane, last_logits,
+                  t0: float) -> None:
+        """Write a prefilled lane into ``slot`` and sample the first token
+        — the shared tail of monolithic, chunked, and prefix-hit prefill.
+        ``t0`` is the admission wall-clock (for a chunked job the measured
+        prefill time includes the decode steps it interleaved with)."""
         self.pool = write_slot(self.pool, slot, lane)
         tok = self._sample_first(req, last_logits)
         dt = time.perf_counter() - t0
@@ -526,6 +619,56 @@ class InferenceEngine:
         self._admit_seq += 1
         if self._is_finished(req, tok):
             self._retire(slot)
+
+    # -- chunked prefill ---------------------------------------------------
+    def _advance_prefill_jobs(self) -> None:
+        """Advance at most ``chunked_prefill`` depth stages across the
+        outstanding jobs, oldest job first (FCFS completion order, best
+        TTFT under load); a job whose last stage completes activates its
+        lane immediately, so it joins this very step's decode."""
+        budget = self.chunked_prefill
+        for slot in sorted(self._prefill_jobs,
+                           key=lambda s: self._prefill_jobs[s].admit_seq):
+            if budget <= 0:
+                return
+            job = self._prefill_jobs[slot]
+            while budget > 0 and job.stage_idx < len(self._pf_stages):
+                st, fn = self._pf_stages[job.stage_idx]
+                with span("engine/prefill_stage"):
+                    job.x, nc, st_g = fn(self.params, self.kstate,
+                                         self._pf_fresh[job.stage_idx],
+                                         job.x, job.positions, {})
+                job.chunks.append(nc)
+                job.stats.append(st_g)
+                job.stage_idx += 1
+                budget -= 1
+            if job.stage_idx == len(self._pf_stages):
+                self._finish_prefill_job(slot)
+
+    def _finish_prefill_job(self, slot: int) -> None:
+        job = self._prefill_jobs.pop(slot)
+        req = job.request
+        lane = assemble_prefill_cache([st for st, _ in self._pf_stages],
+                                      job.chunks)
+        last_logits = self._pf_head(self.params, job.x)[:, -1]
+        if self.routing_stats:
+            self._emit_prefill_stats(req, job.stats)
+        if self.prefix_cache is not None:
+            self.prefix_cache.put(req.prompt, lane, np.asarray(last_logits))
+        self._activate(slot, req, lane, last_logits, job.t0)
+
+    def _drop_prefill_job(self, slot: int, *, held: bool) -> None:
+        """Abandon a mid-prefill job (preemption or explicit park): the
+        partial stage work is dropped — no lane was written yet — and the
+        request requeues as not-yet-prefilled (_ParkedMeta.pos=None, so
+        readmission is a plain re-prefill)."""
+        job = self._prefill_jobs.pop(slot)
+        req = job.request
+        req.state = PARKED
+        self._parked[req.uid] = _ParkedMeta(req, held=held)
+        self.metrics.on_park(req.uid, self.step_count)
+        if not held:
+            self.scheduler.submit(req)
 
     def _is_finished(self, req: Request, tok: int) -> bool:
         return (len(req.output) >= req.max_new_tokens
@@ -589,10 +732,14 @@ class InferenceEngine:
                 self._retire(i)
 
     def step(self) -> None:
-        """One engine iteration: admit + prefill, then one decode step."""
+        """One engine iteration: admit (+ prefill), advance any chunked
+        prefill stages, then one decode step over the active slots."""
         self._rotated_this_step = False
         with span("engine/admit"):
             self._admit_and_prefill()
+        if self._prefill_jobs:
+            with span("engine/prefill_chunk"):
+                self._advance_prefill_jobs()
         with span("engine/decode"):
             self._decode_once()
         self.step_count += 1
@@ -610,6 +757,7 @@ class InferenceEngine:
             "active_slots": float(active.sum()),
             "queued": float(len(self.scheduler)),
             "parked": float(len(self._parked)),
+            "prefilling": float(len(self._prefill_jobs)),
             "decode_steps": float(self.metrics.decode_steps),
         }
         metrics.update(self.kvstore.stats())
@@ -638,8 +786,8 @@ class InferenceEngine:
             self._sink.close()
 
     def has_work(self) -> bool:
-        return bool(len(self.scheduler)) or any(s is not None
-                                                for s in self.slots)
+        return (bool(len(self.scheduler)) or bool(self._prefill_jobs)
+                or any(s is not None for s in self.slots))
 
     def run(self, requests: Sequence[Request] = (),
             max_steps: int = 1_000_000) -> Dict[int, List[int]]:

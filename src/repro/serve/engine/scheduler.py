@@ -19,6 +19,16 @@ from __future__ import annotations
 import bisect
 from typing import List, Optional, Tuple
 
+# Named priority classes for Request.priority. Any int works — the queue
+# orders by the raw value — but the gaps leave room to nudge individual
+# requests within a class (e.g. INTERACTIVE - 1 for a deprioritized but
+# still-interactive session). A higher class admits first and, via the
+# engine's preemption path, parks (or, mid-prefill, drops and requeues)
+# strictly-lower-priority sessions when slots are full.
+PRIORITY_BATCH = -10          # throughput traffic: yields to everything
+PRIORITY_NORMAL = 0           # the Request default
+PRIORITY_INTERACTIVE = 10     # latency-sensitive: preempts lower classes
+
 
 class FCFSScheduler:
     """Priority-then-FCFS queue with slot + token-budget gating."""

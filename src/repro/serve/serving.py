@@ -9,12 +9,14 @@ Cache layouts (per segment, stacked over scan groups G):
                     pages (G,B,Hr,kc,cap,dh) hold the normalized shared-QK
                     routing vectors + values per centroid; a decoded token is
                     routed to its argmax centroid and attends only that page
-                    via take-along-cluster — O(cap . d) per step, no dynamic
-                    gather over the full context. Ring-overwrite per page
-                    bounds memory for 500k-token decode. The fused
-                    routing/pallas_fused train/prefill kernel declares no
-                    decode path, so decode resolution here keeps landing on
-                    routing/xla's cluster pages (asserted in tests).
+                    — O(cap . d) per step. Ring-overwrite per page bounds
+                    memory for 500k-token decode. On TPU, decode resolves to
+                    the routing/pallas_paged kernel, which scalar-prefetches
+                    the cluster-page table and DMAs only the selected page
+                    into VMEM (no HBM gather); elsewhere it lands on
+                    routing/xla's take-along-cluster reference. Both share
+                    one cache layout and bit-identical cache trajectories
+                    (asserted in tests; see docs/attention-backends.md).
   ssd / rglru       recurrent state (+ causal-conv tail)
   cross             static image K/V computed at prefill
 
@@ -25,7 +27,7 @@ training exactly (tested); routing decode uses argmax-cluster membership
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -196,6 +198,18 @@ def make_serve_step(cfg: ModelConfig, mesh=None):
 # Prefill: forward pass that also fills the caches. The fill itself is
 # cache-layout math, so the registered decode backend owns it
 # (CacheLayout.fill via attn.prefill_cache).
+#
+# Prefill is built from resumable depth stages: embed -> one stage per
+# slice of each segment's scan-group axis -> head. Composing every stage
+# in order IS the monolithic forward (prefill() below does exactly that,
+# with whole-segment stages, so its traced program is unchanged); the
+# serve engine instead jits each stage and advances a few per step, so a
+# long prompt's prefill interleaves with active decodes instead of
+# head-of-line-blocking them. Chunking over *depth* rather than over the
+# sequence is deliberate: routing membership is balanced top-k over the
+# whole prompt (DESIGN.md §3), so splitting the sequence would change
+# which pages a later decode attends; splitting over depth keeps every
+# stage bit-identical to the uninterrupted forward.
 # ---------------------------------------------------------------------------
 def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions, mesh=None):
     """Build one layer's cache from prefix activations h (B,N,d)."""
@@ -205,12 +219,143 @@ def _fill_from_prefix(spec, cfg, cache, h, p, kmu, positions, mesh=None):
                                   mesh=mesh)
 
 
+class PrefillStage(NamedTuple):
+    """One resumable prefill stage: scan groups [g0, g1) of segment si.
+
+    ``fn(params, kstate, cache_chunk, x, positions, batch)`` returns
+    ``(x, new_cache_chunk, stats_chunk)`` where ``cache_chunk`` holds the
+    segment's cache leaves sliced to rows g0:g1 of the scan-group axis.
+    """
+    si: int
+    g0: int
+    g1: int
+    fn: Callable
+
+
+def make_prefill_stages(cfg: ModelConfig, mesh=None,
+                        groups_per_stage: Optional[int] = None):
+    """The staged prefill: ``(embed_stage, stages, head_stage)``.
+
+    ``embed_stage(params, batch) -> (x, positions)``;
+    ``head_stage(params, x) -> logits`` (vocab-pad masked);
+    ``stages`` is a list of PrefillStage covering every segment's scan
+    groups in order. ``groups_per_stage=None`` gives one whole-segment
+    stage per segment (what ``prefill`` composes); ``groups_per_stage=k``
+    slices each segment's group axis into ceil(G/k) stages — the engine
+    uses k=1 so even a uniform dense stack (one segment, G=num_layers)
+    chunks per layer group.
+    """
+    from repro.models.transformer import apply_layer
+    segments = build_segments(cfg)
+
+    def embed_stage(params, batch):
+        B, N = batch["tokens"].shape
+        positions = batch.get(
+            "positions",
+            jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N)))
+        return L.embed(params["embed"], batch["tokens"]), positions
+
+    def _make_stage(si, pattern, g0, g1, G):
+        def stage(params, kstate, cache_chunk, x, positions, batch):
+            B = x.shape[0]
+
+            def group_fn(x, xs):
+                p_group, k_group, c_group = xs
+                new_c = {}
+                stats_g = {}
+                for i, spec in enumerate(pattern):
+                    c_i, p_i = c_group[str(i)], p_group[i]
+                    if spec.kind in ("attn", "moe"):
+                        h = L.apply_norm(p_i["ln1"], x, cfg.norm)
+                        c_i = _fill_from_prefix(spec, cfg, c_i, h, p_i,
+                                                k_group.get(str(i)),
+                                                positions, mesh=mesh)
+                    elif spec.kind == "cross":
+                        img = batch["image_embeds"]
+                        dh, Hkv = cfg.head_dim_, cfg.num_kv_heads
+                        M = img.shape[1]
+                        c_i = {
+                            "k": (img @ p_i["attn"]["wk"]).reshape(
+                                B, M, Hkv, dh).transpose(0, 2, 1, 3),
+                            "v": (img @ p_i["attn"]["wv"]).reshape(
+                                B, M, Hkv, dh).transpose(0, 2, 1, 3)}
+                    if spec.kind in ("ssd", "rglru"):
+                        h = L.apply_norm(p_i["ln1"], x, cfg.norm)
+                        if spec.kind == "ssd":
+                            y, (nc_, ns) = ssm_mod.apply_ssd(
+                                p_i["mixer"], h, cfg)
+                            c_i = {"conv": nc_, "state": ns}
+                        else:
+                            y, (nc_, nh) = rglru_mod.apply_rglru(
+                                p_i["mixer"], h, cfg)
+                            c_i = {"conv": nc_, "h": nh}
+                        x = x + y
+                        if spec.kind == "rglru":
+                            h2 = L.apply_norm(p_i["ln2"], x, cfg.norm)
+                            x = x + L.apply_mlp(p_i["ffn"], h2, cfg.act)
+                    else:
+                        x, _, aux_i = apply_layer(
+                            spec, p_i, k_group.get(str(i)), x, cfg,
+                            positions=positions,
+                            pad_mask=batch.get("pad_mask"),
+                            image_embeds=batch.get("image_embeds"),
+                            update_state=False)
+                        st = aux_i.pop("routing_stats", None)
+                        if st is not None:
+                            stats_g[str(i)] = st
+                    new_c[str(i)] = c_i
+                return x, (new_c, stats_g)
+
+            p_seg, k_seg = params["stack"][si], kstate[si]
+            if (g0, g1) != (0, G):
+                p_seg = jax.tree.map(lambda a: a[g0:g1], p_seg)
+                k_seg = jax.tree.map(lambda a: a[g0:g1], k_seg)
+            x, (nc, st_g) = jax.lax.scan(group_fn, x,
+                                         (p_seg, k_seg, cache_chunk))
+            return x, nc, st_g
+
+        return PrefillStage(si, g0, g1, stage)
+
+    stages = []
+    for si, (pattern, G) in enumerate(segments):
+        gps = G if groups_per_stage is None else max(1, groups_per_stage)
+        for g0 in range(0, G, gps):
+            stages.append(_make_stage(si, pattern, g0, min(g0 + gps, G), G))
+
+    def head_stage(params, x):
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.logits_out(params["embed"], x, cfg.tie_embeddings,
+                              cfg.logit_softcap)
+        from repro.models.model import mask_vocab_pad
+        return mask_vocab_pad(logits, cfg)
+
+    return embed_stage, stages, head_stage
+
+
+def slice_cache_groups(seg_cache, g0: int, g1: int):
+    """Rows [g0, g1) of a segment cache's scan-group axis (stage input)."""
+    return jax.tree.map(lambda a: a[g0:g1], seg_cache)
+
+
+def assemble_prefill_cache(stages, chunks):
+    """Stitch per-stage cache chunks back into the per-segment cache list
+    (the inverse of feeding each stage ``slice_cache_groups`` of its
+    segment). ``chunks`` must align with ``stages`` in order."""
+    by_seg: Dict[int, list] = {}
+    for st, nc in zip(stages, chunks):
+        by_seg.setdefault(st.si, []).append(nc)
+    return [cs[0] if len(cs) == 1
+            else jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *cs)
+            for _, cs in sorted(by_seg.items())]
+
+
 def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None,
             return_stats: bool = False):
     """Forward over the prefix, returning (logits, filled_cache).
 
-    Runs the standard stack forward; caches are filled per layer from the
-    layer inputs (python loop over segments, scan over groups).
+    Composes the whole-segment prefill stages in order — the standard
+    stack forward with caches filled per layer from the layer inputs
+    (python loop over segments, scan over groups).
 
     ``return_stats`` (static): with RoutingConfig.stats enabled, also
     return the routing-health stats of the prefix forward as a third
@@ -218,70 +363,16 @@ def prefill(params, kstate, cache, batch, cfg: ModelConfig, mesh=None,
     leaves stacked over scan groups (same structure the train stack puts
     in its aux). Existing 2-tuple call sites are unchanged.
     """
-    from repro.models.transformer import apply_layer
-    segments = build_segments(cfg)
-    B, N = batch["tokens"].shape
-    positions = batch.get(
-        "positions", jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N)))
-    x = L.embed(params["embed"], batch["tokens"])
+    embed_stage, stages, head_stage = make_prefill_stages(cfg, mesh=mesh)
+    x, positions = embed_stage(params, batch)
     new_cache = []
     seg_stats = []
-    for si, (pattern, G) in enumerate(segments):
-        def group_fn(x, xs, pattern=pattern):
-            p_group, k_group, c_group = xs
-            new_c = {}
-            stats_g = {}
-            for i, spec in enumerate(pattern):
-                c_i, p_i = c_group[str(i)], p_group[i]
-                if spec.kind in ("attn", "moe"):
-                    h = L.apply_norm(p_i["ln1"], x, cfg.norm)
-                    c_i = _fill_from_prefix(spec, cfg, c_i, h, p_i,
-                                            k_group.get(str(i)), positions,
-                                            mesh=mesh)
-                elif spec.kind == "cross":
-                    img = batch["image_embeds"]
-                    dh, Hkv = cfg.head_dim_, cfg.num_kv_heads
-                    M = img.shape[1]
-                    c_i = {
-                        "k": (img @ p_i["attn"]["wk"]).reshape(
-                            B, M, Hkv, dh).transpose(0, 2, 1, 3),
-                        "v": (img @ p_i["attn"]["wv"]).reshape(
-                            B, M, Hkv, dh).transpose(0, 2, 1, 3)}
-                if spec.kind in ("ssd", "rglru"):
-                    h = L.apply_norm(p_i["ln1"], x, cfg.norm)
-                    if spec.kind == "ssd":
-                        y, (nc_, ns) = ssm_mod.apply_ssd(
-                            p_i["mixer"], h, cfg)
-                        c_i = {"conv": nc_, "state": ns}
-                    else:
-                        y, (nc_, nh) = rglru_mod.apply_rglru(
-                            p_i["mixer"], h, cfg)
-                        c_i = {"conv": nc_, "h": nh}
-                    x = x + y
-                    if spec.kind == "rglru":
-                        h2 = L.apply_norm(p_i["ln2"], x, cfg.norm)
-                        x = x + L.apply_mlp(p_i["ffn"], h2, cfg.act)
-                else:
-                    x, _, aux_i = apply_layer(
-                        spec, p_i, k_group.get(str(i)), x, cfg,
-                        positions=positions, pad_mask=batch.get("pad_mask"),
-                        image_embeds=batch.get("image_embeds"),
-                        update_state=False)
-                    st = aux_i.pop("routing_stats", None)
-                    if st is not None:
-                        stats_g[str(i)] = st
-                new_c[str(i)] = c_i
-            return x, (new_c, stats_g)
-
-        xs = (params["stack"][si], kstate[si], cache[si])
-        x, (nc, st_g) = jax.lax.scan(lambda c, xs: group_fn(c, xs), x, xs)
+    for st in stages:                   # one whole-segment stage each
+        x, nc, st_g = st.fn(params, kstate, cache[st.si], x, positions,
+                            batch)
         new_cache.append(nc)
         seg_stats.append(st_g)
-    x = L.apply_norm(params["final_norm"], x, cfg.norm)
-    logits = L.logits_out(params["embed"], x, cfg.tie_embeddings,
-                          cfg.logit_softcap)
-    from repro.models.model import mask_vocab_pad
-    logits = mask_vocab_pad(logits, cfg)
+    logits = head_stage(params, x)
     if return_stats:
         return logits, new_cache, seg_stats
     return logits, new_cache

@@ -144,22 +144,30 @@ def test_decode_matches_apply(variant):
 @pytest.mark.parametrize("variant", ["routing", "local+routing"])
 def test_decode_cache_coherent(variant):
     """Decode case for routing variants (argmax-paged decode is the
-    designed serving adaptation, not bit-equal to balanced top-k): every
-    decoded token lands in exactly one page and outputs stay finite."""
+    designed serving adaptation, not bit-equal to balanced top-k): for
+    EVERY registered decode-capable backend — xla and pallas_paged ride
+    the same deselect-free loop — every decoded token lands in exactly
+    one page and outputs stay finite."""
     spec = _spec(variant)
     q, k, v, mu = _inputs(spec, n=32)
-    b = A.decode_backend(spec)
-    assert b.layout.name in ("pages", "ring+pages")
-    # deprecation shim: the old string field mirrors the typed layout
-    assert b.caps.cache_layout == b.layout.name
-    cache = A.init_decode_cache(spec, 2, 32, jnp.float32)
-    for t in range(32):
-        pos = jnp.full((2,), t, jnp.int32)
-        out = A.attend(spec, q[:, :, t:t + 1], k[:, :, t:t + 1],
-                       v[:, :, t:t + 1], cache=cache, pos=pos, state=mu)
-        cache = out.cache
-        assert bool(jnp.isfinite(out.out).all())
-    assert bool((cache["rlen"].sum(-1) == 32).all())
+    ran = []
+    for b in A.backends_for(variant):
+        if not b.caps.supports_decode:
+            continue
+        ran.append(b.impl)
+        assert b.layout.name in ("pages", "ring+pages")
+        # deprecation shim: the old string field mirrors the typed layout
+        assert b.caps.cache_layout == b.layout.name
+        cache = A.init_decode_cache(spec, 2, 32, jnp.float32, impl=b.impl)
+        for t in range(32):
+            pos = jnp.full((2,), t, jnp.int32)
+            out = A.attend(spec, q[:, :, t:t + 1], k[:, :, t:t + 1],
+                           v[:, :, t:t + 1], cache=cache, pos=pos,
+                           state=mu, impl=b.impl)
+            cache = out.cache
+            assert bool(jnp.isfinite(out.out).all()), b.name
+        assert bool((cache["rlen"].sum(-1) == 32).all()), b.name
+    assert "xla" in ran and "pallas_paged" in ran
 
 
 # ---------------------------------------------------------------------------
@@ -264,16 +272,19 @@ def test_auto_resolution_prefers_pallas_on_tpu_only():
 def test_fused_routing_preferred_on_tpu():
     """Auto-resolution takes the gather-free fused kernel over the
     gathered pallas path on TPU (priority 20 vs 10), including under
-    needs_grad (it has a VJP); decode keeps resolving to the xla
-    cluster-paged backend (the fused kernel declares no decode path) —
-    serving's routing decode path is unchanged."""
+    needs_grad (it has a VJP). Decode resolves to the paged-decode
+    kernel (routing/pallas_paged) on TPU — the fused backend still
+    declares no decode path; pallas_paged registers after it at the same
+    priority, so the tie breaks toward fused for apply and toward the
+    paged kernel for decode (parity: tests/test_routing_decode.py)."""
     for variant in ("routing", "local+routing"):
         spec = _spec(variant)
         assert A.resolve(spec, platform="tpu").impl == "pallas_fused"
         assert A.resolve(spec, platform="tpu",
                          needs_grad=True).impl == "pallas_fused"
         assert A.resolve(spec, platform="cpu").impl == "xla"
-        assert A.decode_backend(spec, platform="tpu").impl == "xla"
+        assert A.decode_backend(spec, platform="tpu").impl == "pallas_paged"
+        assert A.decode_backend(spec, platform="cpu").impl == "xla"
         # beyond the fused kernel's VMEM-resident plane budget
         # (max_seq_elems caps seq_len x head_dim), auto-selection falls
         # back to the per-tile gathered kernel instead of failing Mosaic

@@ -17,7 +17,8 @@ import pytest
 
 from repro.configs.base import ModelConfig, RoutingConfig
 from repro.models.model import init_model
-from repro.serve.engine import (FCFSScheduler, InferenceEngine, Request,
+from repro.serve.engine import (PRIORITY_BATCH, PRIORITY_INTERACTIVE,
+                                FCFSScheduler, InferenceEngine, Request,
                                 SamplingParams, init_pool, read_slot,
                                 request_key, reset_slot, sample_tokens,
                                 write_slot)
@@ -189,6 +190,120 @@ def test_sampled_outputs_independent_of_co_tenants(model):
                               max_len=MAX_LEN)
         outs.append(eng.run(tenants + [mk()])[50])
     assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: depth stages interleaved with decode (docs/serving.md)
+# ---------------------------------------------------------------------------
+def _clone(reqs):
+    return [dataclasses.replace(r, output=[]) for r in reqs]
+
+
+def test_chunked_prefill_matches_unchunked(model):
+    """Depth-chunked prefill produces the same token streams as monolithic
+    prefill for any stage budget, and two chunked engines with different
+    budgets are bit-identical per decode step (same staged jits, only the
+    scheduling differs)."""
+    params, kstate = model
+    base = _mk_requests(n=8)
+    ref = InferenceEngine(CFG, params, kstate, max_slots=3, max_len=MAX_LEN)
+    out_ref = ref.run(_clone(base))
+    traces = {}
+    for budget in (1, 3):
+        eng = InferenceEngine(CFG, params, kstate, max_slots=3,
+                              max_len=MAX_LEN, chunked_prefill=budget,
+                              record_logits=True)
+        assert out_ref == eng.run(_clone(base)), budget
+        assert all(s is None for s in eng.slots)        # pool drained
+        assert not eng._prefill_jobs                    # no orphan jobs
+        traces[budget] = eng.logits_trace
+    for uid in traces[1]:
+        for a, b in zip(traces[1][uid], traces[3][uid]):
+            assert np.array_equal(a, b)                 # BIT-identical
+
+
+def test_chunked_prefill_interleaves_decode(model):
+    """A long prompt admitted mid-flight no longer head-of-line-blocks:
+    the already-decoding session gains a token on every step while the
+    newcomer's prefill advances one depth stage at a time."""
+    params, kstate = model
+    rng = np.random.RandomState(13)
+    eng = InferenceEngine(CFG, params, kstate, max_slots=2, max_len=MAX_LEN,
+                          chunked_prefill=1)
+    a = eng.submit(Request(uid=0, prompt=rng.randint(
+        0, CFG.vocab_size, size=6).tolist(), max_new_tokens=12))
+    while not a.output:                 # a's own staged prefill drains
+        eng.step()
+    b = eng.submit(Request(uid=1, prompt=rng.randint(
+        0, CFG.vocab_size, size=20).tolist(), max_new_tokens=3))
+    interleaved = 0
+    while b.state in ("queued", "active") and not b.output:
+        n = len(a.output)
+        eng.step()
+        if eng._prefill_jobs:           # b mid-prefill after this step
+            interleaved += 1
+            assert len(a.output) == n + 1   # a decoded through it
+    assert interleaved >= 1             # prefill genuinely spanned steps
+    while eng.has_work():
+        eng.step()
+    assert a.output == _solo_reference(params, kstate, a._request)
+    assert b.output == _solo_reference(params, kstate, b._request)
+
+
+def test_priority_preempts_mid_prefill_job(model):
+    """max_slots=1, chunked_prefill=1: an interactive-class arrival
+    preempts a batch-class request still in its prefill stages; the
+    victim's partial work is dropped, it requeues, re-prefills, and both
+    finish with solo-exact outputs."""
+    params, kstate = model
+    rng = np.random.RandomState(17)
+    low = Request(uid=0, prompt=rng.randint(
+        0, CFG.vocab_size, size=14).tolist(), max_new_tokens=5,
+        priority=PRIORITY_BATCH)
+    high = Request(uid=1, prompt=rng.randint(
+        0, CFG.vocab_size, size=6).tolist(), max_new_tokens=4,
+        priority=PRIORITY_INTERACTIVE)
+    eng = InferenceEngine(CFG, params, kstate, max_slots=1, max_len=MAX_LEN,
+                          chunked_prefill=1)
+    eng.submit(low)
+    eng.step()
+    assert [j.request.uid for j in eng._prefill_jobs.values()] == [0]
+    eng.submit(high)
+    eng.step()                          # high evicts the mid-prefill job
+    assert low.state in ("PARKED", "PREFILL", "WAITING")
+    assert ([j.request.uid for j in eng._prefill_jobs.values()] == [1]
+            or high.state == "DECODE")
+    assert low.output == []             # partial prefill left no tokens
+    while eng.has_work():
+        eng.step()
+    assert low.state == high.state == "FINISHED"
+    assert list(low.output) == _solo_reference(params, kstate, low)
+    assert list(high.output) == _solo_reference(params, kstate, high)
+    assert eng.metrics.summary()["parks"] >= 1
+
+
+def test_park_mid_prefill_requeues(model):
+    """handle.park() on a session still in its prefill stages holds it
+    with no lane in the KV store; resume() re-prefills from scratch and
+    the output is unaffected."""
+    params, kstate = model
+    rng = np.random.RandomState(19)
+    eng = InferenceEngine(CFG, params, kstate, max_slots=1, max_len=MAX_LEN,
+                          chunked_prefill=1)
+    h = eng.submit(Request(uid=5, prompt=rng.randint(
+        0, CFG.vocab_size, size=10).tolist(), max_new_tokens=4))
+    eng.step()
+    assert eng._prefill_jobs and not h.output
+    h.park()
+    assert h.state == "parked"
+    assert not eng._prefill_jobs and 5 not in eng.kvstore
+    eng.step()                          # parked+held: nothing to run
+    assert not h.output
+    h.resume()
+    while eng.has_work():
+        eng.step()
+    assert h.state == "finished"
+    assert h.output == _solo_reference(params, kstate, h._request)
 
 
 # ---------------------------------------------------------------------------

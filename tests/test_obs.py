@@ -103,6 +103,46 @@ def test_schema_rejects_tampered_lines(tmp_path):
         validate_jsonl(path)
 
 
+def test_schema_whole_file_json_mode(tmp_path):
+    """CI's docs-check runs the CLI over committed bench records: whole
+    .json files are held to strict finite JSON (bare NaN rejected even
+    though json.loads accepts it)."""
+    from repro.obs.schema import main as schema_main
+    from repro.obs.schema import validate_json_file
+    ok = tmp_path / "BENCH_x.json"
+    ok.write_text(json.dumps({"speedup": 2.5, "backends":
+                              {"routing": "pallas_paged"}, "note": None}))
+    validate_json_file(str(ok))
+    assert schema_main([str(ok)]) == 0
+    for payload in ('{"x": NaN}',            # json.loads-accepted, invalid
+                    '{"x": Infinity}',
+                    '{"x": 1,}'):            # not JSON at all
+        bad = tmp_path / "bad.json"
+        bad.write_text(payload)
+        with pytest.raises(SchemaError):
+            validate_json_file(str(bad))
+        assert schema_main([str(bad)]) == 1
+
+
+def test_committed_records_and_docs_pass_checks():
+    """The repo's own committed artifacts/docs satisfy the CI docs-check
+    step (anchor linter + whole-file record validation)."""
+    import importlib.util
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    from repro.obs.schema import validate_json_file
+    records = ([root / "BENCH_routing.json"]
+               + sorted((root / "benchmarks").glob("*smoke*.json")))
+    assert records
+    for rec in records:
+        validate_json_file(str(rec))
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", root / "tools" / "check_docs.py")
+    check_docs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(check_docs)
+    assert check_docs.check(root) == []
+
+
 def test_step_series_history(tmp_path):
     path = str(tmp_path / "s.jsonl")
     series = StepSeries(sink=JsonlSink(path), kind="train_step")

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Docs anchor/link linter — keeps README.md and docs/ from rotting.
+
+Two checks over README.md, docs/**/*.md, and DESIGN.md:
+
+1. **Section anchors.** Every ``§N`` / ``§N.M`` reference in README.md
+   and docs/ must have a matching ``## §N ...`` or ``### §N.M ...``
+   heading in DESIGN.md (the docstring convention ``DESIGN.md §N`` is
+   how code and guides cite the design reference — a renumbered or
+   deleted section must not leave dangling citations).
+2. **Relative links.** Every relative markdown link target
+   (``[text](path)`` — http/mailto/anchor-only links skipped) must
+   exist on disk, resolved against the linking file's directory.
+
+Exit 0 when clean; prints each failure and exits 1 otherwise. CI runs
+this in the docs-check step next to the committed-record schema
+validation (``python -m repro.obs.schema``).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SECTION_REF = re.compile(r"§(\d+(?:\.\d+)?)")
+SECTION_DEF = re.compile(r"^#{2,3}\s+§(\d+(?:\.\d+)?)\b", re.MULTILINE)
+# [text](target) — not images' inner (), not reference-style defs;
+# good enough for the hand-written markdown in this repo
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parent.parent
+
+
+def doc_files(root: Path):
+    yield root / "README.md"
+    yield root / "DESIGN.md"
+    yield from sorted((root / "docs").glob("**/*.md"))
+
+
+def check(root: Path) -> list:
+    errors = []
+    design = root / "DESIGN.md"
+    defined = set(SECTION_DEF.findall(design.read_text()))
+    if not defined:
+        errors.append(f"{design}: no '## §N' headings found")
+
+    for path in doc_files(root):
+        if not path.exists():
+            errors.append(f"{path}: missing")
+            continue
+        text = path.read_text()
+        rel = path.relative_to(root)
+
+        if path != design:  # DESIGN.md defines sections, others cite them
+            for ref in SECTION_REF.findall(text):
+                if ref not in defined:
+                    errors.append(
+                        f"{rel}: cites §{ref} but DESIGN.md has no "
+                        f"'## §{ref}' heading (defined: "
+                        f"{', '.join(sorted(defined, key=_skey))})")
+
+        for target in MD_LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            dest = (path.parent / target.split("#", 1)[0]).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def _skey(s: str):
+    return tuple(int(p) for p in s.split("."))
+
+
+def main() -> int:
+    root = repo_root()
+    errors = check(root)
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if not errors:
+        n = sum(1 for _ in doc_files(root))
+        print(f"docs check OK ({n} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,237 @@
+"""Disaggregated prefill/decode pools + async KV transfers (DESIGN.md §11.5).
+
+Three measurements on one model:
+
+  disagg parity     the same workload through (a) one monolithic engine
+                    and (b) a prefill-pool engine that parks + exports
+                    every freshly prefilled session through a transport
+                    and a decode-pool engine that imports + decodes them.
+                    Token streams must be bit-identical — the
+                    ``--check`` gate fails the run otherwise. Measured
+                    over the in-process loopback transport AND a real
+                    localhost TCP blob peer (the same rails the
+                    two-process harness examples/disaggregate.py uses).
+  async park        the oversubscription workload (sessions >> slots,
+                    time-slice rotation, dozens of parks) under
+                    synchronous vs async transfers: the admission path's
+                    park cost drops from the full host materialization
+                    to an enqueue (the transfer overlaps subsequent
+                    decode steps), outputs still bit-exact vs a
+                    never-evicting pool.
+  transport cost    bytes and p50 put/get latency through the TCP peer
+                    for the exported session blobs.
+
+Run:  PYTHONPATH=src python -m benchmarks.disagg
+CI:   PYTHONPATH=src python -m benchmarks.disagg --smoke \
+          --json benchmarks/disagg_smoke.json --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.serve_engine import build_model, make_workload
+from repro.serve.engine import InferenceEngine
+from repro.serve.kvstore import KVStore, StoreConfig
+from repro.serve.kvstore.remote import (LoopbackTransport, TCPStoreServer,
+                                        TCPTransport)
+
+
+def _run_monolithic(cfg, params, kstate, reqs, max_slots, max_len):
+    eng = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
+                          max_len=max_len)
+    t0 = time.perf_counter()
+    out = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    eng.close()
+    return out, wall
+
+
+def _run_disaggregated(cfg, params, kstate, reqs, max_slots, max_len,
+                       make_transport):
+    """Prefill pool -> exported blobs -> decode pool; returns outputs,
+    per-pool wall times, and the decode pool's transport stats."""
+    pre = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
+                          max_len=max_len, prefill_only=True,
+                          kvstore=KVStore(StoreConfig(
+                              remote=make_transport())))
+    t0 = time.perf_counter()
+    for r in reqs:
+        pre.submit(r)
+    while pre.has_work():
+        pre.step()
+    names = [pre.export_session(r.uid) for r in reqs
+             if r.state == "PARKED"]
+    prefill_wall = time.perf_counter() - t0
+    pre.close()
+
+    dec_transport = make_transport()
+    dec = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
+                          max_len=max_len,
+                          kvstore=KVStore(StoreConfig(
+                              remote=dec_transport,
+                              async_transfers=True)))
+    t0 = time.perf_counter()
+    handles = [dec.import_session(n) for n in names]
+    while dec.has_work():
+        dec.step()
+    decode_wall = time.perf_counter() - t0
+    tstats = (dec_transport.stats()
+              if hasattr(dec_transport, "stats") else {})
+    dec.close()
+    out = {h.uid: h.output for h in handles}
+    for r in reqs:                      # sessions finished at prefill
+        if r.uid not in out:
+            out[r.uid] = list(r.output)
+    return out, prefill_wall, decode_wall, tstats
+
+
+def bench_disagg(cfg, params, kstate, n_requests, max_slots, max_len) -> dict:
+    mk = lambda: make_workload(cfg, n_requests=n_requests, arrival_every=0)
+    ref, mono_wall = _run_monolithic(cfg, params, kstate, mk(),
+                                     max_slots, max_len)
+
+    loop = LoopbackTransport()
+    out_l, pre_l, dec_l, _ = _run_disaggregated(
+        cfg, params, kstate, mk(), max_slots, max_len, lambda: loop)
+
+    with TCPStoreServer() as server:
+        out_t, pre_t, dec_t, tstats = _run_disaggregated(
+            cfg, params, kstate, mk(), max_slots, max_len,
+            lambda: TCPTransport(server.host, server.port))
+
+    return {
+        "n_requests": n_requests, "max_slots": max_slots,
+        "monolithic_wall_s": mono_wall,
+        "loopback": {
+            "outputs_identical": out_l == ref,
+            "prefill_wall_s": pre_l, "decode_wall_s": dec_l,
+            "blob_bytes": loop.stats()["transport/bytes_out"],
+        },
+        "tcp": {
+            "outputs_identical": out_t == ref,
+            "prefill_wall_s": pre_t, "decode_wall_s": dec_t,
+            "blob_bytes_in": tstats.get("transport/bytes_in", 0.0),
+            "get_p50_ms": tstats.get("transport/get_p50_s", 0.0) * 1e3,
+        },
+    }
+
+
+def bench_async_park(cfg, params, kstate, n_sessions, max_slots, max_len,
+                     time_slice: int = 4) -> dict:
+    """Sessions >> slots with rotation: sync vs async park latency on the
+    admission path, outputs checked against a never-evicting pool."""
+    mk = lambda: make_workload(cfg, n_requests=n_sessions, arrival_every=0)
+    big = InferenceEngine(cfg, params, kstate, max_slots=n_sessions,
+                          max_len=max_len)
+    ref = big.run(mk())
+    big.close()
+
+    results = {}
+    for mode, store_cfg in (("sync", StoreConfig()),
+                            ("async", StoreConfig(async_transfers=True))):
+        eng = InferenceEngine(cfg, params, kstate, max_slots=max_slots,
+                              max_len=max_len, time_slice=time_slice,
+                              kvstore=KVStore(store_cfg))
+        t0 = time.perf_counter()
+        out = eng.run(mk())
+        wall = time.perf_counter() - t0
+        stats = eng.kvstore.stats()
+        results[mode] = {
+            "wall_s": wall,
+            "outputs_identical": out == ref,
+            "parks": stats["kvstore/parks"],
+            "park_p50_ms": stats.get("kvstore/park_p50_s", 0.0) * 1e3,
+            "transfer_p50_ms":
+                stats.get("kvstore/park_transfer_p50_s", 0.0) * 1e3,
+        }
+        eng.close()
+    return {
+        "n_sessions": n_sessions, "max_slots": max_slots,
+        "time_slice": time_slice,
+        "sync": results["sync"], "async": results["async"],
+        # the headline: what the admission path pays per park
+        "park_admission_p50_ms": {
+            "sync": results["sync"]["park_p50_ms"],
+            "async_enqueue": results["async"]["park_p50_ms"],
+        },
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller model + workload (CI regression gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary record as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless both disaggregated runs are "
+                         "bit-identical to the monolithic engine and the "
+                         "async-park run parked enough to be meaningful")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg, params, kstate = build_model(num_layers=2, d_model=128,
+                                          num_heads=4, num_kv_heads=2,
+                                          d_ff=256)
+        n_requests, n_sessions, max_slots = 8, 12, 4
+    else:
+        cfg, params, kstate = build_model()
+        n_requests, n_sessions, max_slots = 12, 16, 4
+    max_len = 128
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params; "
+          f"{n_requests} requests over {max_slots} slots per pool")
+
+    dg = bench_disagg(cfg, params, kstate, n_requests, max_slots, max_len)
+    print(f"disagg loopback: prefill {dg['loopback']['prefill_wall_s']:.2f}s"
+          f" + decode {dg['loopback']['decode_wall_s']:.2f}s vs monolithic "
+          f"{dg['monolithic_wall_s']:.2f}s, "
+          f"{dg['loopback']['blob_bytes']/2**20:.1f} MiB shipped, "
+          f"identical: {dg['loopback']['outputs_identical']}")
+    print(f"disagg tcp: get p50 {dg['tcp']['get_p50_ms']:.2f} ms, "
+          f"{dg['tcp']['blob_bytes_in']/2**20:.1f} MiB pulled, "
+          f"identical: {dg['tcp']['outputs_identical']}")
+
+    ap_ = bench_async_park(cfg, params, kstate, n_sessions, max_slots,
+                           max_len)
+    print(f"async park: {ap_['async']['parks']:.0f} parks; admission p50 "
+          f"sync {ap_['sync']['park_p50_ms']:.3f} ms vs async enqueue "
+          f"{ap_['async']['park_p50_ms']:.3f} ms (background transfer p50 "
+          f"{ap_['async']['transfer_p50_ms']:.3f} ms), identical: "
+          f"{ap_['async']['outputs_identical']}")
+
+    if args.json:
+        record = {"smoke": args.smoke, "model": cfg.name,
+                  "params_m": cfg.param_count() / 1e6,
+                  "disagg": dg, "async_park": ap_}
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    if args.check:
+        ok = True
+        for rail in ("loopback", "tcp"):
+            if not dg[rail]["outputs_identical"]:
+                print(f"FAIL: disaggregated ({rail}) token streams diverged "
+                      f"from the monolithic engine", file=sys.stderr)
+                ok = False
+        for mode in ("sync", "async"):
+            if not ap_[mode]["outputs_identical"]:
+                print(f"FAIL: {mode}-park outputs diverged from the "
+                      f"never-evicting pool", file=sys.stderr)
+                ok = False
+        if ap_["async"]["parks"] < 30:
+            print(f"FAIL: only {ap_['async']['parks']:.0f} parks — the "
+                  f"async path was not meaningfully exercised",
+                  file=sys.stderr)
+            ok = False
+        if not ok:
+            sys.exit(1)
+        print("disagg gate passed: both pools bit-identical to monolithic, "
+              "async park bit-exact under rotation")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,12 @@ Request lifecycle::
                                                    slot returned to pool)
     DECODE  --park (preempted / time-sliced / handle.park())--> PARKED
     PARKED  --readmitted, lane streamed back----> DECODE (any free slot)
+    PARKED  --export_session (disaggregation)---> EXPORTED (lane + request
+                                                  state shipped through a
+                                                  transport blob; a peer
+                                                  engine's import_session
+                                                  continues the decode
+                                                  bit-exact)
 
 Each engine ``step()``:
 
@@ -65,14 +71,21 @@ from repro.serve.engine.pool import (init_pool, read_slot, reset_slot,
 from repro.serve.engine.scheduler import FCFSScheduler
 from repro.serve.engine.sampling import (SamplingParams, request_base_key,
                                          request_key, sample_tokens)
-from repro.serve.kvstore import KVStore, PrefixCache
+from repro.serve.kvstore import KVStore, PrefixCache, StoreConfig
 from repro.serve.serving import (assemble_prefill_cache, decode_backends,
-                                 init_cache, make_prefill_stages,
-                                 make_serve_step, prefill,
-                                 slice_cache_groups)
+                                 decode_cache_layouts, init_cache,
+                                 make_prefill_stages, make_serve_step,
+                                 prefill, slice_cache_groups)
 
 WAITING, PREFILL, DECODE, FINISHED = "WAITING", "PREFILL", "DECODE", "FINISHED"
-PARKED, CANCELLED = "PARKED", "CANCELLED"
+PARKED, CANCELLED, EXPORTED = "PARKED", "CANCELLED", "EXPORTED"
+
+# cache layouts whose prefill and decode write identical state for
+# identical token streams — the gate for partial-prefix reuse (a cached
+# shorter prefix + teacher-forced tail is bit-exact iff every layout in
+# the stack is here; cluster-page layouts are not: prefill routes with
+# balanced top-k, decode with argmax)
+_PARTIAL_SAFE_LAYOUTS = frozenset({"append", "ring"})
 
 
 @dataclass
@@ -116,7 +129,8 @@ class SessionHandle:
     def state(self) -> str:
         return {WAITING: "queued", PREFILL: "active", DECODE: "active",
                 PARKED: "parked", FINISHED: "finished",
-                CANCELLED: "cancelled"}[self._request.state]
+                CANCELLED: "cancelled", EXPORTED: "exported"}[
+                    self._request.state]
 
     @property
     def output(self) -> List[int]:
@@ -216,7 +230,8 @@ class InferenceEngine:
                  kvstore: Optional[KVStore] = None,
                  prefix_cache: Optional[PrefixCache] = None,
                  time_slice: Optional[int] = None,
-                 chunked_prefill: Optional[int] = None):
+                 chunked_prefill: Optional[int] = None,
+                 prefill_only: bool = False):
         if routing_stats:
             # flip the static stats flag so prefill forwards compute the
             # routing-health aux (decode-side health comes from the
@@ -277,9 +292,27 @@ class InferenceEngine:
         self.record_logits = record_logits
         self.logits_trace: Dict[int, List[np.ndarray]] = {}
         # tiered KV store: where parked sessions live (host tier by
-        # default; StoreConfig adds disk spill)
-        self.kvstore = kvstore if kvstore is not None else KVStore()
+        # default; StoreConfig adds disk spill and a remote transport).
+        # The engine-owned default runs async transfers so the admission
+        # path never blocks on a host copy; a caller-provided store keeps
+        # whatever mode the caller chose.
+        self._owns_kvstore = kvstore is None
+        self.kvstore = (kvstore if kvstore is not None
+                        else KVStore(StoreConfig(async_transfers=True)))
         self.prefix_cache = prefix_cache
+        # partial-prefix reuse is only bit-exact when every decode cache
+        # layout writes the same state under teacher-forcing as under
+        # prefill (see _PARTIAL_SAFE_LAYOUTS); the teacher-forcing step
+        # itself runs unsharded, so it is gated off on a mesh
+        self._partial_prefix = (
+            prefix_cache is not None and mesh is None
+            and decode_cache_layouts(cfg) <= _PARTIAL_SAFE_LAYOUTS)
+        self._tail_step = (jax.jit(make_serve_step(cfg))
+                           if self._partial_prefix else None)
+        # prefill_only: the disaggregated prefill pool's mode — sessions
+        # park (held) right after their first token instead of decoding,
+        # ready for export_session() to ship them to a decode pool
+        self.prefill_only = prefill_only
         # time_slice: decode steps a session may hold a slot while others
         # wait; None = run to completion (park only on priority preemption
         # or an explicit handle.park())
@@ -503,6 +536,80 @@ class InferenceEngine:
         if meta.held:
             meta.held = False
             self.scheduler.submit(meta.request)
+        if meta.pos is not None:
+            # scheduler hint: readmission is coming — start pulling the
+            # lane back toward the host tier now
+            self.kvstore.prefetch(uid)
+
+    # -- disaggregation rail (prefill pool -> decode pool) -----------------
+    def export_session(self, uid: int, *, name: Optional[str] = None,
+                       transport=None) -> str:
+        """Ship a parked (post-prefill) session to another engine through
+        a transport blob: the lane plus the request/decode state rides in
+        one checksummed blob. The session leaves this engine (state
+        EXPORTED); ownership transfers to whoever ``import_session``s the
+        returned name."""
+        meta = self._parked.get(uid)
+        if meta is None or meta.pos is None:
+            raise ValueError(
+                f"session {uid} is not parked with a prefilled lane "
+                f"(park it after prefill before exporting)")
+        sp = meta.request.sampling
+        m = {
+            "uid": uid,
+            "prompt": [int(t) for t in meta.request.prompt],
+            "output": [int(t) for t in meta.request.output],
+            "max_new_tokens": meta.request.max_new_tokens,
+            "eos_id": meta.request.eos_id,
+            "priority": meta.request.priority,
+            "sampling": {"temperature": sp.temperature, "top_k": sp.top_k,
+                         "top_p": sp.top_p, "seed": sp.seed},
+            "pos": meta.pos,
+            "last_token": meta.last_token,
+            "base_key": {"data": np.asarray(meta.base_key).tolist(),
+                         "dtype": str(np.asarray(meta.base_key).dtype)},
+        }
+        name = self.kvstore.export(uid, name=name, meta=m,
+                                   transport=transport)
+        self._parked.pop(uid)
+        meta.request.state = EXPORTED
+        if self._sink is not None:
+            self._sink.emit("session_export", step=self.step_count,
+                            uid=uid, name=name,
+                            metrics={"tokens": float(meta.pos)})
+        return name
+
+    def import_session(self, name: str, *, transport=None) -> SessionHandle:
+        """Adopt a session another engine exported: the lane goes into
+        this engine's KV store, the request/decode state is rebuilt from
+        the blob meta, and the session queues for readmission — decode
+        continues bit-exact where the exporter stopped (counter-based
+        sampling keys make the continuation engine-independent)."""
+        uid, m = self.kvstore.import_remote(name, transport=transport)
+        if (self.scheduler.has_uid(uid) or uid in self._parked
+                or any(s is not None and s.request.uid == uid
+                       for s in self.slots)):
+            self.kvstore.drop(uid)
+            raise ValueError(f"imported session uid {uid} collides with a "
+                             f"live session here")
+        req = Request(uid=uid, prompt=m["prompt"],
+                      max_new_tokens=m["max_new_tokens"],
+                      eos_id=m["eos_id"],
+                      sampling=SamplingParams(**m["sampling"]),
+                      priority=m["priority"], state=PARKED,
+                      output=list(m["output"]))
+        base_key = np.asarray(m["base_key"]["data"]).astype(
+            np.dtype(m["base_key"]["dtype"]))
+        self._parked[uid] = _ParkedMeta(req, pos=m["pos"],
+                                        last_token=m["last_token"],
+                                        base_key=base_key, held=False)
+        self.scheduler.submit(req)
+        self.metrics.on_submit(uid, req.prompt_len, self.step_count)
+        if self._sink is not None:
+            self._sink.emit("session_import", step=self.step_count,
+                            uid=uid, name=name,
+                            metrics={"tokens": float(m["pos"])})
+        return SessionHandle(self, req)
 
     def cancel_session(self, uid: int) -> None:
         """Drop a session wherever it is (queue, slot, or KV store)."""
@@ -538,6 +645,10 @@ class InferenceEngine:
             free = self.free_slot_ids()
             if not self.scheduler.admittable(head, len(free),
                                              self.tokens_in_flight()):
+                # the head will be placed soon: warm its lane back toward
+                # the host tier while it waits (no-op unless spilled)
+                if head.uid in self._parked:
+                    self.kvstore.prefetch(head.uid)
                 if not self._maybe_park_for(head):
                     return
                 free = self.free_slot_ids()
@@ -558,14 +669,23 @@ class InferenceEngine:
     def _prefill_into(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         req.state = PREFILL
-        hit = (self.prefix_cache.get(req.prompt)
+        hit = (self.prefix_cache.get(req.prompt,
+                                     partial=self._partial_prefix)
                if self.prefix_cache is not None else None)
-        if hit is not None:
+        if hit is not None and hit.matched == req.prompt_len:
             # exact-prompt hit: the shared read-only lane + stored logits
             # row stand in for the model call; write_slot copies the lane
             # into the pool, so the shared pages are never aliased
-            lane, last_row = hit
-            self._activate(slot, req, lane, jnp.asarray(last_row), t0)
+            self._activate(slot, req, hit.lane,
+                           jnp.asarray(hit.last_logits), t0)
+            return
+        if hit is not None:
+            # longest-prefix hit: teacher-force the remaining prompt tail
+            # through decode steps over the cached lane. Bit-exact to a
+            # full prefill by the layout gate (append/ring decode writes
+            # exactly the rows prefill would), so the contract that a hit
+            # is byte-identical to a miss still holds.
+            self._prefill_from_prefix(slot, req, hit, t0)
             return
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         if self.chunked_prefill is not None:
@@ -584,6 +704,28 @@ class InferenceEngine:
         if self.routing_stats and len(res) > 2:
             self._emit_prefill_stats(req, res[2])
         if self.prefix_cache is not None:
+            self.prefix_cache.put(req.prompt, lane, np.asarray(last_logits))
+        self._activate(slot, req, lane, last_logits, t0)
+
+    def _prefill_from_prefix(self, slot: int, req: Request, hit,
+                             t0: float) -> None:
+        """Fill ``slot`` from a cached shorter-prefix lane: run decode
+        steps over the B=1 lane with the prompt tail as forced inputs
+        (positions ``matched .. prompt_len-1``), then activate on the
+        final logits row exactly like a monolithic prefill."""
+        k = hit.matched
+        lane = jax.tree.map(jnp.asarray, hit.lane)
+        on = jnp.ones((1,), bool)
+        last_logits = None
+        with span("engine/prefill_tail"):
+            for i, tok in enumerate(req.prompt[k:]):
+                last_logits, lane = self._tail_step(
+                    self.params, self.kstate, lane,
+                    jnp.asarray([tok], jnp.int32),
+                    jnp.asarray([k + i], jnp.int32), on)
+        if self.prefix_cache is not None:
+            # the extended lane becomes a full-prompt entry, so the next
+            # identical prompt hits exactly
             self.prefix_cache.put(req.prompt, lane, np.asarray(last_logits))
         self._activate(slot, req, lane, last_logits, t0)
 
@@ -619,6 +761,11 @@ class InferenceEngine:
         self._admit_seq += 1
         if self._is_finished(req, tok):
             self._retire(slot)
+        elif self.prefill_only:
+            # disaggregated prefill pool: the session's work here is done
+            # — park it held, ready for export_session() to ship it to a
+            # decode pool
+            self._park_slot(slot, held=True)
 
     # -- chunked prefill ---------------------------------------------------
     def _advance_prefill_jobs(self) -> None:
@@ -733,15 +880,18 @@ class InferenceEngine:
 
     def step(self) -> None:
         """One engine iteration: admit (+ prefill), advance any chunked
-        prefill stages, then one decode step over the active slots."""
+        prefill stages, then one decode step over the active slots
+        (skipped under ``prefill_only`` — that pool's sessions park right
+        after their first token)."""
         self._rotated_this_step = False
         with span("engine/admit"):
             self._admit_and_prefill()
         if self._prefill_jobs:
             with span("engine/prefill_chunk"):
                 self._advance_prefill_jobs()
-        with span("engine/decode"):
-            self._decode_once()
+        if not self.prefill_only:
+            with span("engine/decode"):
+                self._decode_once()
         self.step_count += 1
         if self._sink is not None:
             self._emit_tick()
@@ -761,6 +911,11 @@ class InferenceEngine:
             "decode_steps": float(self.metrics.decode_steps),
         }
         metrics.update(self.kvstore.stats())
+        # tier events (e.g. kvstore_remote_degraded) become records of
+        # their own kind, interleaved with the ticks
+        for ev in self.kvstore.drain_events():
+            ev = dict(ev)
+            self._sink.emit(ev.pop("kind"), step=self.step_count, **ev)
         if self.prefix_cache is not None:
             metrics.update(self.prefix_cache.stats())
         # fetch only the (tiny) rlen occupancy leaves, never the pages
@@ -780,10 +935,14 @@ class InferenceEngine:
         self._sink.emit("engine_tick", metrics=metrics, step=self.step_count)
 
     def close(self) -> None:
-        """Emit the final summary record and close the JSONL sink."""
+        """Settle in-flight KV transfers, emit the final summary record,
+        and close the JSONL sink (and the engine-owned KV store)."""
+        self.kvstore.flush()
         if self._sink is not None:
             self._sink.emit("engine_summary", metrics=self.metrics.summary())
             self._sink.close()
+        if self._owns_kvstore:
+            self.kvstore.close()
 
     def has_work(self) -> bool:
         return (bool(len(self.scheduler)) or bool(self._prefill_jobs)

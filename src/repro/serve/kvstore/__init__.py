@@ -1,18 +1,27 @@
 """repro.serve.kvstore — tiered KV store behind the slot pool (§11).
 
-Two tiers below the device pool:
+Three tiers below the device pool:
 
   host    parked sessions live as numpy pytrees (cluster pages stored
           compacted: only the occupied prefix of each page, per the
           backend CacheLayout's pageable_leaves/page_len_leaf)
-  disk    optional npz spill once the host tier exceeds its byte limit
-          (dtype-proof uint8 views, so bf16 lanes round-trip bit-exact)
+  disk    optional spill once the host tier exceeds its byte limit —
+          one checksummed blob file per session (versioned header +
+          CRC32, verified on load)
+  remote  optional ``Transport`` to a peer blob store beyond the disk
+          tier; also the rail sessions move over between disaggregated
+          prefill/decode pools (``export`` / ``import_remote``)
 
 Public surface:
   KVStore, StoreConfig, ParkedSession — park(uid, lane) / resume(uid)
-  PrefixCache                         — hash-keyed shared prompt pages
+  InflightPark                        — async park completion handle
+  PrefixCache, PrefixHit              — shared prompt pages, longest-
+                                        prefix partial reuse
+  repro.serve.kvstore.remote          — blob codec + transports + worker
 """
-from repro.serve.kvstore.prefix import PrefixCache
-from repro.serve.kvstore.store import KVStore, ParkedSession, StoreConfig
+from repro.serve.kvstore.prefix import PrefixCache, PrefixHit
+from repro.serve.kvstore.store import (InflightPark, KVStore, ParkedSession,
+                                       StoreConfig)
 
-__all__ = ["KVStore", "StoreConfig", "ParkedSession", "PrefixCache"]
+__all__ = ["KVStore", "StoreConfig", "ParkedSession", "InflightPark",
+           "PrefixCache", "PrefixHit"]

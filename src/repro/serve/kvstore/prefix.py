@@ -1,17 +1,30 @@
 """Hash-keyed prefix cache: shared prompts fill their cache lane once.
 
-Keys are the SHA-1 of the *full* token prompt. This is deliberate — for
-routing caches a partial-prefix continuation is not bit-exact: prefill
-fills cluster pages with balanced top-k membership while decode routes
-each token to its argmax page only, so teacher-forcing the tail of a
-prompt over a shorter cached prefix produces different hidden states
-than prefilling the whole prompt (DESIGN.md §11). Exact full-prompt
-keying keeps every hit byte-identical to a miss, which is what the
-engine's bit-parity contract requires; the win is the common serving
-shape where many sessions share one system/task prompt verbatim.
+Keys are the SHA-1 of the token prompt. Two lookup modes:
+
+  exact    (default) the full prompt must match byte-for-byte — every
+           hit is byte-identical to a miss by construction, which is
+           what the engine's bit-parity contract requires for *all*
+           attention variants.
+  partial  longest-prefix match: the longest cached entry whose prompt
+           is a prefix of the query is returned with ``matched`` set to
+           the prefix length, and the caller teacher-forces the
+           remaining ``prompt[matched:]`` tokens through decode steps.
+
+Partial reuse is only bit-exact for cache layouts whose prefill and
+decode write identical state for identical token streams — append
+(full attention k/v) and ring (local windows): a decode step at
+position p writes exactly the row/slot prefill would have. Routing
+caches break this — prefill fills cluster pages with *balanced top-k*
+membership while decode routes each token to its argmax page only, so
+teacher-forcing a tail over a shorter cached prefix produces different
+pages (and different logits) than prefilling the whole prompt
+(DESIGN.md §11). The engine therefore gates ``partial=True`` on the
+model's cache layouts (serving.decode_cache_layouts ⊆ {append, ring});
+cluster-page layouts keep exact full-prompt keying.
 
 An entry is the prefilled B=1 lane plus the last-position logits row
-(so the hit path samples the first output token without running the
+(so an exact hit samples the first output token without running the
 model), both held as read-only numpy (``writeable=False``) — entries
 are shared by reference across sessions, and ``write_slot`` copies them
 into the pool, so a hit never aliases device state.
@@ -20,12 +33,22 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from typing import Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.obs import Registry
+
+
+class PrefixHit(NamedTuple):
+    """A cache hit: ``lane`` prefilled over ``prompt[:matched]`` and the
+    logits row at position ``matched - 1``. ``matched == len(prompt)``
+    for exact hits; shorter only under ``get(..., partial=True)``."""
+
+    lane: object
+    last_logits: np.ndarray
+    matched: int
 
 
 def _freeze(x: np.ndarray) -> np.ndarray:
@@ -34,38 +57,62 @@ def _freeze(x: np.ndarray) -> np.ndarray:
     return x
 
 
+def _as_tokens(prompt: Sequence[int]) -> np.ndarray:
+    return np.asarray(prompt, np.int64)
+
+
 class PrefixCache:
-    """LRU map: SHA-1(prompt tokens) -> (read-only lane, last logits row)."""
+    """LRU map: SHA-1(prompt tokens) -> PrefixHit, with optional
+    longest-prefix partial lookup."""
 
     def __init__(self, capacity: int = 64):
         if capacity < 1:
             raise ValueError("PrefixCache capacity must be >= 1")
         self.capacity = capacity
-        self._entries: "OrderedDict[str, Tuple[object, np.ndarray]]" = \
-            OrderedDict()
+        self._entries: "OrderedDict[str, PrefixHit]" = OrderedDict()
         self.obs = Registry()
         self._hits = self.obs.counter("kvstore/prefix_hits")
+        self._partial = self.obs.counter("kvstore/prefix_partial_hits")
         self._misses = self.obs.counter("kvstore/prefix_misses")
 
     @staticmethod
     def key(prompt: Sequence[int]) -> str:
-        return hashlib.sha1(
-            np.asarray(prompt, np.int64).tobytes()).hexdigest()
+        return hashlib.sha1(_as_tokens(prompt).tobytes()).hexdigest()
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, prompt: Sequence[int]
-            ) -> Optional[Tuple[object, np.ndarray]]:
-        """(lane, last_logits_row) for an exact prompt match, else None."""
-        k = self.key(prompt)
+    def get(self, prompt: Sequence[int],
+            partial: bool = False) -> Optional[PrefixHit]:
+        """The entry for ``prompt`` (exact), or — under ``partial`` —
+        the entry for the *longest cached strict prefix* of ``prompt``
+        (``matched < len(prompt)``; the caller owns teacher-forcing the
+        tail and the layout gate that makes that bit-exact). None on
+        miss."""
+        toks = _as_tokens(prompt)
+        k = hashlib.sha1(toks.tobytes()).hexdigest()
         hit = self._entries.get(k)
-        if hit is None:
-            self._misses.inc()
-            return None
-        self._entries.move_to_end(k)
-        self._hits.inc()
-        return hit
+        if hit is not None:
+            self._entries.move_to_end(k)
+            self._hits.inc()
+            return hit
+        if partial:
+            # one incremental SHA-1 sweep: hash every proper prefix,
+            # remember the longest that names an entry
+            best_key = None
+            h = hashlib.sha1()
+            raw = toks.tobytes()
+            for n in range(1, len(toks)):
+                h.update(raw[(n - 1) * 8:n * 8])
+                pk = h.hexdigest()
+                if pk in self._entries:
+                    best_key = pk
+            if best_key is not None:
+                self._entries.move_to_end(best_key)
+                self._partial.inc()
+                return self._entries[best_key]
+        self._misses.inc()
+        return None
 
     def put(self, prompt: Sequence[int], lane, last_logits) -> None:
         """Store the prefilled ``lane`` + ``last_logits`` (1, V) row."""
@@ -74,19 +121,22 @@ class PrefixCache:
             self._entries.move_to_end(k)
             return
         host_lane = jax.tree.map(lambda x: _freeze(np.asarray(x)), lane)
-        self._entries[k] = (host_lane, _freeze(np.asarray(last_logits)))
+        self._entries[k] = PrefixHit(host_lane,
+                                     _freeze(np.asarray(last_logits)),
+                                     len(_as_tokens(prompt)))
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
 
     @property
     def hit_rate(self) -> float:
-        n = self._hits.value + self._misses.value
-        return self._hits.value / n if n else 0.0
+        n = self._hits.value + self._partial.value + self._misses.value
+        return (self._hits.value + self._partial.value) / n if n else 0.0
 
     def stats(self) -> dict:
         return {
             "kvstore/prefix_entries": float(len(self._entries)),
             "kvstore/prefix_hits": self._hits.value,
+            "kvstore/prefix_partial_hits": self._partial.value,
             "kvstore/prefix_misses": self._misses.value,
             "kvstore/prefix_hit_rate": self.hit_rate,
         }

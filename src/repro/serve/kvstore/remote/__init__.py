@@ -1,0 +1,41 @@
+"""repro.serve.kvstore.remote — the distributed KV plane (§11.5).
+
+Three layers under one roof:
+
+  blob       the shared codec: versioned header (treedef skeleton, leaf
+             dtypes/shapes, compacted-page lengths) + CRC32, verified on
+             every decode — disk spill and remote transfer speak the
+             same format
+  transport  named-blob put/get/delete/exists: LoopbackTransport
+             (in-process), TCPTransport + TCPStoreServer (peer host,
+             framed sockets, timeouts + bounded backoff retries),
+             FileTransport (shared directory / object-store mount),
+             FaultInjectionTransport (deterministic failure drills)
+  worker     the background transfer thread that makes park/resume
+             async (device→host copies and transport puts overlap the
+             next decode steps)
+
+``KVStore`` consumes all of this via ``StoreConfig(remote=...,
+async_transfers=...)`` — see repro.serve.kvstore.store.
+"""
+from repro.serve.kvstore.remote.blob import (BLOB_VERSION, BlobChecksumError,
+                                             BlobError, decode_session,
+                                             encode_session)
+from repro.serve.kvstore.remote.tcp import TCPStoreServer, TCPTransport
+from repro.serve.kvstore.remote.transport import (BlobNotFound,
+                                                  FaultInjectionTransport,
+                                                  FileTransport,
+                                                  InstrumentedTransport,
+                                                  LoopbackTransport,
+                                                  RetryPolicy, Transport,
+                                                  TransportError,
+                                                  with_retries)
+from repro.serve.kvstore.remote.worker import TransferHandle, TransferWorker
+
+__all__ = [
+    "BLOB_VERSION", "BlobChecksumError", "BlobError", "BlobNotFound",
+    "FaultInjectionTransport", "FileTransport", "InstrumentedTransport",
+    "LoopbackTransport", "RetryPolicy", "TCPStoreServer", "TCPTransport",
+    "Transport", "TransferHandle", "TransferWorker", "TransportError",
+    "decode_session", "encode_session", "with_retries",
+]

@@ -1,0 +1,178 @@
+"""One codec for every off-device tier: versioned blob header + CRC32.
+
+A blob is the wire/file form of a ``ParkedSession`` — the *same*
+compacted cluster-page representation the host tier keeps (only the
+occupied ``min(rlen, cap)`` prefix of each page travels), so a remote
+round trip is bit-exact to the logit for exactly the reason the local
+one is. Layout::
+
+    offset 0   magic  b"RKVB"
+           4   u8     version (== BLOB_VERSION)
+           5   u32    header length (big-endian)
+           9   header JSON (utf-8)
+           ..  leaf payload bytes, concatenated in header order
+        last 4 u32    CRC32 of everything before it (big-endian)
+
+The header carries the pytree *skeleton* (the nested list/dict
+structure with leaf indices at the leaves — cache lanes are plain
+JSON-able containers, which ``encode_session`` enforces loudly), and
+per-leaf metadata: key path, logical shape, dtype name, stored shape
+(compacted leaves store fewer rows than their logical shape), byte
+length, and the page-length sibling key compacted leaves re-expand
+against. Plus an arbitrary JSON ``meta`` dict for the caller (the
+engine rides session/request state through it for disaggregation).
+
+The CRC is verified on decode: a truncated or corrupted blob — on disk
+*or* fetched over a transport — raises ``BlobChecksumError`` instead of
+resuming silent garbage. The local disk spill writes this same format
+(``KVStore._spill``), which is what closed PR 7's unchecksummed-npz
+hole: local and remote tiers share one codec and one failure mode.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MAGIC = b"RKVB"
+BLOB_VERSION = 1
+_HEAD = struct.Struct(">4sBI")          # magic, version, header_len
+_CRC = struct.Struct(">I")
+
+
+class BlobError(ValueError):
+    """Malformed blob (bad magic/version/header, truncated payload)."""
+
+
+class BlobChecksumError(BlobError):
+    """CRC32 mismatch — the blob was corrupted in storage or transit."""
+
+
+def _dtype_name(dt) -> str:
+    return np.dtype(dt).name
+
+
+def _dtype_from_name(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        # ml_dtypes names (bfloat16, float8_*) resolve once jax's dtype
+        # extensions are imported; jnp carries them as attributes
+        import jax.numpy as jnp
+        dt = getattr(jnp, name, None)
+        if dt is None:
+            raise BlobError(f"unknown leaf dtype {name!r}")
+        return np.dtype(dt)
+
+
+def _skeleton(treedef, n_leaves: int):
+    """The container structure with leaf *indices* as leaves — must be
+    JSON-able (cache lanes are lists/dicts all the way down)."""
+    skel = jax.tree_util.tree_unflatten(treedef, list(range(n_leaves)))
+    try:
+        json.dumps(skel)
+    except TypeError as e:
+        raise BlobError(
+            f"cache tree contains non-JSON-able containers ({e}); the "
+            f"blob codec supports list/dict pytrees only") from None
+    return skel
+
+
+def _rebuild(skel, leaves: List[np.ndarray]):
+    if isinstance(skel, int):
+        return leaves[skel]
+    if isinstance(skel, list):
+        return [_rebuild(s, leaves) for s in skel]
+    if isinstance(skel, dict):
+        return {k: _rebuild(v, leaves) for k, v in skel.items()}
+    raise BlobError(f"unsupported skeleton node {type(skel).__name__}")
+
+
+def encode_session(sess, meta: Optional[Dict[str, Any]] = None) -> bytes:
+    """Serialize a resident ``ParkedSession`` (leaves must be in host
+    memory, not spilled) plus an optional JSON ``meta`` dict."""
+    leaves_meta = []
+    payloads = []
+    for key in sess.order:
+        rec = sess.leaves[key]
+        if rec.data is None:
+            raise BlobError(
+                f"leaf {key!r} of session {sess.uid} is not resident "
+                f"(spilled?); load it before encoding")
+        raw = np.ascontiguousarray(rec.data).view(np.uint8).reshape(-1)
+        leaves_meta.append({
+            "key": key,
+            "shape": list(rec.shape),
+            "dtype": _dtype_name(rec.dtype),
+            "stored_shape": list(rec.data.shape),
+            "nbytes": int(raw.nbytes),
+            "page_len_key": rec.page_len_key,
+        })
+        payloads.append(raw.tobytes())
+    header = {
+        "uid": sess.uid,
+        "skeleton": _skeleton(sess.treedef, len(sess.order)),
+        "leaves": leaves_meta,
+        "meta": meta if meta is not None else {},
+    }
+    hdr = json.dumps(header, separators=(",", ":")).encode()
+    body = b"".join([_HEAD.pack(MAGIC, BLOB_VERSION, len(hdr)), hdr,
+                     *payloads])
+    return body + _CRC.pack(zlib.crc32(body) & 0xFFFFFFFF)
+
+
+def decode_session(data: bytes) -> Tuple[object, Dict[str, Any]]:
+    """Rebuild a ``ParkedSession`` (host tier, fully resident) and the
+    caller ``meta`` dict from ``encode_session`` output. Verifies the
+    CRC32 before trusting a single byte of the payload."""
+    from repro.serve.kvstore.store import ParkedSession, _LeafRec
+
+    if len(data) < _HEAD.size + _CRC.size:
+        raise BlobError(f"blob truncated: {len(data)} bytes")
+    (crc_stored,) = _CRC.unpack_from(data, len(data) - _CRC.size)
+    if zlib.crc32(data[:-_CRC.size]) & 0xFFFFFFFF != crc_stored:
+        raise BlobChecksumError(
+            "blob CRC32 mismatch — corrupted in storage or transit")
+    magic, version, hdr_len = _HEAD.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise BlobError(f"bad blob magic {magic!r}")
+    if version != BLOB_VERSION:
+        raise BlobError(f"unsupported blob version {version} "
+                        f"(this codec reads {BLOB_VERSION})")
+    off = _HEAD.size
+    try:
+        header = json.loads(data[off:off + hdr_len])
+    except ValueError as e:
+        raise BlobError(f"unreadable blob header ({e})")
+    off += hdr_len
+    leaves: List[np.ndarray] = []
+    recs: Dict[str, _LeafRec] = {}
+    order: List[str] = []
+    for lm in header["leaves"]:
+        n = int(lm["nbytes"])
+        if off + n > len(data) - _CRC.size:
+            raise BlobError(f"blob payload truncated at leaf {lm['key']!r}")
+        dt = _dtype_from_name(lm["dtype"])
+        arr = (np.frombuffer(data, np.uint8, count=n, offset=off)
+               .view(dt).reshape(lm["stored_shape"]).copy())
+        off += n
+        order.append(lm["key"])
+        recs[lm["key"]] = _LeafRec(tuple(lm["shape"]), dt, arr,
+                                   page_len_key=lm["page_len_key"])
+        leaves.append(arr)
+    # recover the treedef from the JSON skeleton (leaf order under
+    # tree_flatten matches encode's: dict keys flatten sorted, and JSON
+    # round-trips key strings unchanged)
+    tree = _rebuild(header["skeleton"], list(range(len(leaves))))
+    idx, treedef = jax.tree_util.tree_flatten(tree)
+    if idx != sorted(idx):
+        raise BlobError("blob skeleton leaf order disagrees with "
+                        "flatten order")
+    sess = ParkedSession(uid=int(header["uid"]), treedef=treedef,
+                         order=order, leaves=recs)
+    sess.nbytes = sum(r.data.nbytes for r in recs.values())
+    return sess, header.get("meta", {})

@@ -1,38 +1,52 @@
-"""Host/disk KV store: park a slot's cache lane off-device, resume it
+"""Tiered KV store: park a slot's cache lane off-device, resume it
 bit-exact into any free slot (DESIGN.md §11).
 
 ``park(uid, lane)`` takes the B=1 pytree ``read_slot`` extracts and moves
-it to the host tier; ``resume(uid)`` hands back a pytree ``write_slot``
-accepts, with every leaf byte-identical to what was parked. Between the
-two, storage is cut two ways:
+it off-device; ``resume(uid)`` hands back a pytree ``write_slot``
+accepts, with every leaf byte-identical to what was parked. Four tiers:
 
-  per-page compaction   cluster-paged leaves ((G, B, H, kc, cap, dh),
-                        declared by each backend CacheLayout's
-                        ``pageable_leaves``) keep only the occupied
-                        prefix of each page — ``min(page_len, cap)``
-                        slots per (head, cluster). Unoccupied page slots
-                        are zeros by construction (fresh lanes are
-                        zeroed, prefill writes only kept slots, decode
-                        appends one slot at a time, reset re-zeros), so
-                        dropping them and re-zeroing on resume is
-                        bit-exact. Short sessions park at a fraction of
-                        the full lane footprint.
-  disk spill            beyond ``host_bytes_limit`` the least-recently
-                        parked sessions spill to npz under ``spill_dir``
-                        as uint8 views (bf16/ml_dtypes round-trip safely
-                        through the raw bytes) and are reloaded on
-                        resume.
+  device   the engine's slot pool (not this module's problem)
+  host     parked sessions as numpy pytrees, cluster-paged leaves kept
+           compacted — only the occupied ``min(page_len, cap)`` prefix
+           of each page (unoccupied slots are zeros by construction:
+           fresh lanes are zeroed, prefill writes only kept slots,
+           decode appends one slot, reset re-zeros — so dropping them
+           and re-zeroing on resume is bit-exact)
+  disk     beyond ``host_bytes_limit`` the least-recently parked
+           sessions spill to ``spill_dir`` in the checksummed blob
+           format (remote/blob.py: versioned header + CRC32, verified
+           on load — a corrupted spill file raises instead of resuming
+           silent garbage)
+  remote   beyond the disk tier (``disk_bytes_limit``, or directly when
+           no ``spill_dir`` is set): the same blob pushed through a
+           ``Transport`` to a peer host / object store. Remote failure
+           after the transport's retries degrades gracefully — the
+           session stays on the nearer tier and a
+           ``kvstore_remote_degraded`` event is recorded; a parked
+           session is never lost.
 
-Device→host transfers start async (``copy_to_host_async``) across all
-leaves before the first blocking read, so lane leaves overlap on the
-interconnect. Metrics (park/resume latency histograms, bytes moved,
-spill counts) live in a ``repro.obs.Registry`` owned by the store; the
-engine folds ``stats()`` into its ``engine_tick`` records.
+``async_transfers=True`` moves every tier transfer onto a background
+worker thread: ``park()`` launches the device→host copies
+(``copy_to_host_async``) and returns immediately with an in-flight
+handle, so the engine's admission path overlaps the host transfer with
+its next decode step; ``resume()``/``export()`` wait for the in-flight
+transfer first, and ``prefetch(uid)`` warms a disk/remote session back
+to host on a scheduler hint. ``export``/``import_remote`` move whole
+sessions (plus caller metadata) between processes through a transport —
+the primitive the disaggregated prefill/decode pools are built on.
+
+Metrics (park/resume latency histograms, background transfer latency,
+bytes per tier, spill/remote/degraded counts) live in a
+``repro.obs.Registry`` owned by the store; the engine folds ``stats()``
+into its ``engine_tick`` records and drains ``drain_events()`` into
+JSONL records.
 """
 from __future__ import annotations
 
 import os
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -41,31 +55,51 @@ import numpy as np
 
 from repro import attn as attn_api
 from repro.obs import Registry
+from repro.serve.kvstore.remote.blob import decode_session, encode_session
+from repro.serve.kvstore.remote.transport import Transport, TransportError
+from repro.serve.kvstore.remote.worker import TransferHandle, TransferWorker
+
+SPILL_SUFFIX = ".blob"
 
 
 @dataclass(frozen=True)
 class StoreConfig:
     """Knobs for the tiered store.
 
-    ``spill_dir``        directory for the disk tier (None = host only;
-                         with a byte limit but no dir, over-limit parks
-                         raise instead of silently growing)
-    ``host_bytes_limit`` soft cap on resident parked bytes — exceeding
-                         it spills least-recently-parked sessions
-    ``compact_pages``    per-page compaction of cluster-paged leaves
-                         (disable only for debugging round-trips)
+    ``spill_dir``         directory for the disk tier (None = no disk
+                          tier; with a host byte limit but neither disk
+                          nor remote, over-limit parks raise instead of
+                          silently growing)
+    ``host_bytes_limit``  soft cap on resident parked bytes — exceeding
+                          it moves least-recently-parked sessions down a
+                          tier (disk first, else remote)
+    ``disk_bytes_limit``  soft cap on spilled bytes — exceeding it
+                          pushes the oldest disk sessions to the remote
+                          tier (requires ``remote``)
+    ``remote``            a ``Transport`` to a peer blob store: the tier
+                          beyond disk, and the rail ``export`` /
+                          ``import_remote`` move sessions over for
+                          disaggregated prefill/decode pools
+    ``compact_pages``     per-page compaction of cluster-paged leaves
+                          (disable only for debugging round-trips)
+    ``async_transfers``   run host materialization, tier eviction, and
+                          prefetch on a background worker so ``park()``
+                          returns without blocking on the host transfer
     """
 
     spill_dir: Optional[str] = None
     host_bytes_limit: Optional[int] = None
+    disk_bytes_limit: Optional[int] = None
+    remote: Optional[Transport] = None
     compact_pages: bool = True
+    async_transfers: bool = False
 
 
 @dataclass
 class _LeafRec:
     shape: Tuple[int, ...]
     dtype: Any
-    data: Optional[np.ndarray]          # None while spilled to disk
+    data: Optional[np.ndarray]          # None while spilled/remote
     page_len_key: Optional[str] = None  # set => data is the compacted
     #                                     occupied-prefix values
 
@@ -79,6 +113,40 @@ class ParkedSession:
     nbytes: int = 0                     # host bytes (compacted)
     parked_at: float = 0.0
     spill_path: Optional[str] = None    # set while on the disk tier
+    remote_name: Optional[str] = None   # set while on the remote tier
+
+    @property
+    def resident(self) -> bool:
+        return self.spill_path is None and self.remote_name is None
+
+
+class InflightPark:
+    """What ``park()`` returns under ``async_transfers``: the session's
+    uid plus a completion handle. ``nbytes`` reads 0 until the host
+    materialization lands (the engine's park record is emitted before
+    the bytes are known — by design, that is the latency being hidden).
+    """
+
+    def __init__(self, uid: int, handle: TransferHandle):
+        self.uid = uid
+        self._handle = handle
+
+    @property
+    def done(self) -> bool:
+        return self._handle.done
+
+    @property
+    def nbytes(self) -> int:
+        if not self._handle.done or self._handle._error is not None:
+            return 0
+        return self._handle._result.nbytes
+
+    def wait(self, timeout: Optional[float] = None) -> ParkedSession:
+        return self._handle.wait(timeout)
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else "in-flight"
+        return f"InflightPark(uid={self.uid}, {state})"
 
 
 def _leaf_name(path) -> str:
@@ -99,50 +167,156 @@ def _occupied(rlen: np.ndarray, cap: int) -> np.ndarray:
 
 
 class KVStore:
-    """Tiered (host + optional disk) store of parked session lanes."""
+    """Tiered (host + optional disk + optional remote) session store."""
 
     def __init__(self, config: StoreConfig = StoreConfig()):
         self.config = config
         self._sessions: Dict[int, ParkedSession] = {}
+        self._inflight: Dict[int, InflightPark] = {}
+        self._prefetching: Dict[int, TransferHandle] = {}
+        self._events: "deque[dict]" = deque(maxlen=512)
+        self._lock = threading.RLock()
+        self._worker: Optional[TransferWorker] = None
         self.obs = Registry()
         self._park_s = self.obs.histogram("kvstore/park_s")
         self._resume_s = self.obs.histogram("kvstore/resume_s")
+        self._transfer_s = self.obs.histogram("kvstore/park_transfer_s")
         self._parks = self.obs.counter("kvstore/parks")
         self._resumes = self.obs.counter("kvstore/resumes")
         self._to_host = self.obs.counter("kvstore/bytes_to_host")
         self._to_dev = self.obs.counter("kvstore/bytes_to_device")
         self._spilled_b = self.obs.counter("kvstore/bytes_spilled")
         self._spills = self.obs.counter("kvstore/spills")
+        self._to_remote = self.obs.counter("kvstore/bytes_to_remote")
+        self._from_remote = self.obs.counter("kvstore/bytes_from_remote")
+        self._remote_parks = self.obs.counter("kvstore/remote_parks")
+        self._remote_resumes = self.obs.counter("kvstore/remote_resumes")
+        self._exports = self.obs.counter("kvstore/exports")
+        self._imports = self.obs.counter("kvstore/imports")
+        self._degraded = self.obs.counter("kvstore/remote_degraded")
+        self._prefetches = self.obs.counter("kvstore/prefetches")
         if config.spill_dir:
             os.makedirs(config.spill_dir, exist_ok=True)
+        if config.disk_bytes_limit is not None and config.remote is None:
+            raise ValueError("disk_bytes_limit needs a remote transport "
+                             "(the tier beyond disk) to evict into")
+
+    def _get_worker(self) -> TransferWorker:
+        with self._lock:
+            if self._worker is None:
+                self._worker = TransferWorker()
+            return self._worker
 
     # -- inventory ---------------------------------------------------------
     def __contains__(self, uid: int) -> bool:
-        return uid in self._sessions
+        with self._lock:
+            return uid in self._sessions or uid in self._inflight
 
     def __len__(self) -> int:
-        return len(self._sessions)
+        with self._lock:
+            # union: an async park is briefly in both maps while the
+            # worker commits the materialized session
+            return len(self._sessions.keys() | self._inflight.keys())
 
     @property
     def host_bytes(self) -> int:
-        return sum(s.nbytes for s in self._sessions.values()
-                   if s.spill_path is None)
+        with self._lock:
+            return sum(s.nbytes for s in self._sessions.values()
+                       if s.resident)
 
     def drop(self, uid: int) -> None:
-        s = self._sessions.pop(uid, None)
-        if s is not None and s.spill_path and os.path.exists(s.spill_path):
+        self._wait_uid(uid)
+        with self._lock:
+            s = self._sessions.pop(uid, None)
+        if s is None:
+            return
+        if s.spill_path and os.path.exists(s.spill_path):
             os.remove(s.spill_path)
+        if s.remote_name and self.config.remote is not None:
+            try:
+                self.config.remote.delete(s.remote_name)
+            except (TransportError, KeyError):
+                pass                    # best-effort remote GC
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Wait until every in-flight park/prefetch has settled (their
+        errors surface at the dependent resume/export, not here)."""
+        with self._lock:
+            handles = ([p._handle for p in self._inflight.values()]
+                       + list(self._prefetching.values()))
+        for h in handles:
+            h._event.wait(timeout)
+        if self._worker is not None:
+            self._worker.flush(timeout)
+
+    def close(self) -> None:
+        self.flush()
+        if self._worker is not None:
+            self._worker.close()
+            self._worker = None
+
+    def drain_events(self) -> List[dict]:
+        """Pop accumulated tier events (e.g. ``kvstore_remote_degraded``)
+        — the engine emits them as JSONL records on its tick."""
+        with self._lock:
+            out = list(self._events)
+            self._events.clear()
+        return out
+
+    def _wait_uid(self, uid: int) -> None:
+        """Settle any in-flight park/prefetch for ``uid`` (re-raising a
+        background park failure at the caller that depends on it)."""
+        with self._lock:
+            park = self._inflight.get(uid)
+            pre = self._prefetching.get(uid)
+        if park is not None:
+            park.wait()
+        if pre is not None:
+            pre._event.wait()
 
     # -- park --------------------------------------------------------------
-    def park(self, uid: int, lane) -> ParkedSession:
-        """Move the B=1 cache ``lane`` to the host tier under ``uid``."""
-        if uid in self._sessions:
-            raise ValueError(f"session {uid} is already parked")
+    def park(self, uid: int, lane):
+        """Move the B=1 cache ``lane`` off-device under ``uid``.
+
+        Returns the ``ParkedSession`` (sync) or an ``InflightPark``
+        handle (``async_transfers``: the host materialization and any
+        tier eviction continue on the worker thread while the caller
+        keeps decoding).
+        """
+        with self._lock:
+            if uid in self._sessions or uid in self._inflight:
+                raise ValueError(f"session {uid} is already parked")
         t0 = time.perf_counter()
         flat, treedef = jax.tree_util.tree_flatten_with_path(lane)
         for _, leaf in flat:                    # overlap device→host
             if hasattr(leaf, "copy_to_host_async"):
                 leaf.copy_to_host_async()
+        if not self.config.async_transfers:
+            sess = self._materialize(uid, flat, treedef, t0)
+            self._park_s.record(time.perf_counter() - t0)
+            self._parks.inc()
+            return sess
+        handle = TransferHandle(f"park:{uid}")
+        inflight = InflightPark(uid, handle)
+        with self._lock:
+            self._inflight[uid] = inflight
+        self._get_worker().submit(
+            lambda: self._bg_park(uid, flat, treedef, t0), handle)
+        self._park_s.record(time.perf_counter() - t0)
+        self._parks.inc()
+        return inflight
+
+    def _bg_park(self, uid: int, flat, treedef, t0: float) -> ParkedSession:
+        try:
+            return self._materialize(uid, flat, treedef, t0)
+        finally:
+            with self._lock:
+                self._inflight.pop(uid, None)
+
+    def _materialize(self, uid: int, flat, treedef,
+                     t0: float) -> ParkedSession:
+        """Host conversion + page compaction + insert + limit
+        enforcement — the body of a park, on whichever thread runs it."""
         host = {jax.tree_util.keystr(p): np.asarray(v) for p, v in flat}
         pageable = (attn_api.pageable_cache_leaves()
                     if self.config.compact_pages else {})
@@ -164,15 +338,17 @@ class KVStore:
             sess.leaves[key] = _LeafRec(arr.shape, arr.dtype,
                                         np.ascontiguousarray(arr))
         sess.nbytes = sum(r.data.nbytes for r in sess.leaves.values())
-        self._sessions[uid] = sess
+        with self._lock:
+            self._sessions[uid] = sess
         self._enforce_limit()
-        dt = time.perf_counter() - t0
-        self._park_s.record(dt)
-        self._parks.inc()
         self._to_host.inc(sess.nbytes)
-        self.obs.gauge("kvstore/host_bytes").set(self.host_bytes)
-        self.obs.gauge("kvstore/sessions").set(len(self._sessions))
+        self._transfer_s.record(time.perf_counter() - t0)
+        self._update_gauges()
         return sess
+
+    def _update_gauges(self) -> None:
+        self.obs.gauge("kvstore/host_bytes").set(self.host_bytes)
+        self.obs.gauge("kvstore/sessions").set(len(self))
 
     # -- resume ------------------------------------------------------------
     def resume(self, uid: int):
@@ -180,14 +356,23 @@ class KVStore:
 
         Returns a host pytree in the exact structure/dtypes ``write_slot``
         validates against the pool; the jitted write streams it back to
-        the device.
+        the device. Waits for an in-flight park/prefetch of the same uid
+        first, so async mode never races its own transfers.
         """
-        sess = self._sessions.get(uid)
+        self._wait_uid(uid)
+        with self._lock:
+            sess = self._sessions.get(uid)
         if sess is None:
             raise KeyError(f"no parked session {uid}")
         t0 = time.perf_counter()
+        # a failed load leaves the session record (and whatever tier copy
+        # survives) in the store — the uid is only removed after success
+        if sess.remote_name is not None:
+            self._fetch_remote(sess)
         if sess.spill_path is not None:
             self._load_spill(sess)
+        with self._lock:
+            del self._sessions[uid]
         # pass 1: full (non-compacted) leaves — includes every page_len
         # leaf the compacted ones need
         full: Dict[str, np.ndarray] = {
@@ -203,66 +388,255 @@ class KVStore:
             full[key] = out
         lane = jax.tree_util.tree_unflatten(
             sess.treedef, [full[k] for k in sess.order])
-        del self._sessions[uid]
-        if sess.spill_path and os.path.exists(sess.spill_path):
-            os.remove(sess.spill_path)
-        dt = time.perf_counter() - t0
-        self._resume_s.record(dt)
+        self._resume_s.record(time.perf_counter() - t0)
         self._resumes.inc()
         self._to_dev.inc(sess.nbytes)
-        self.obs.gauge("kvstore/host_bytes").set(self.host_bytes)
-        self.obs.gauge("kvstore/sessions").set(len(self._sessions))
+        self._update_gauges()
         return lane
+
+    def prefetch(self, uid: int) -> Optional[TransferHandle]:
+        """Scheduler hint: warm a disk/remote session back to host in the
+        background so the upcoming ``resume`` finds it resident. No-op
+        for resident/in-flight/unknown uids."""
+        with self._lock:
+            if uid in self._inflight or uid in self._prefetching:
+                return self._prefetching.get(uid)
+            sess = self._sessions.get(uid)
+            if sess is None or sess.resident:
+                return None
+            handle = TransferHandle(f"prefetch:{uid}")
+            self._prefetching[uid] = handle
+        self._prefetches.inc()
+        self._get_worker().submit(lambda: self._bg_prefetch(uid), handle)
+        return handle
+
+    def _bg_prefetch(self, uid: int) -> None:
+        try:
+            with self._lock:
+                sess = self._sessions.get(uid)
+            if sess is None or sess.resident:
+                return
+            if sess.remote_name is not None:
+                self._fetch_remote(sess)
+            if sess.spill_path is not None:
+                self._load_spill(sess)
+        finally:
+            with self._lock:
+                self._prefetching.pop(uid, None)
 
     # -- disk tier ---------------------------------------------------------
     def _enforce_limit(self) -> None:
         limit = self.config.host_bytes_limit
         if limit is None:
             return
-        resident = [(s.parked_at, s) for s in self._sessions.values()
-                    if s.spill_path is None]
-        resident.sort(key=lambda x: x[0])
-        total = sum(s.nbytes for _, s in resident)
+        with self._lock:
+            resident = sorted(
+                (s for s in self._sessions.values() if s.resident),
+                key=lambda s: s.parked_at)
+            total = sum(s.nbytes for s in resident)
         while total > limit and resident:
-            _, victim = resident.pop(0)
-            if self.config.spill_dir is None:
-                raise RuntimeError(
-                    f"host tier over host_bytes_limit ({total} > {limit} "
-                    f"bytes) and no spill_dir configured")
-            self._spill(victim)
+            victim = resident.pop(0)
+            if not self._evict(victim):
+                break                   # degraded: tolerate over-limit
+            total -= victim.nbytes
+        self._enforce_disk_limit()
+
+    def _evict(self, sess: ParkedSession) -> bool:
+        """Move one resident session down a tier. True iff it left the
+        host tier; False means every lower tier refused (the session
+        stays resident — never lost — and a degradation was recorded or
+        an error raised when no tier exists at all)."""
+        if self.config.spill_dir is not None:
+            self._spill(sess)
+            return True
+        if self.config.remote is not None:
+            return self._push_remote(sess)
+        raise RuntimeError(
+            f"host tier over host_bytes_limit and no spill_dir or remote "
+            f"transport configured (session {sess.uid} has nowhere to go)")
+
+    def _enforce_disk_limit(self) -> None:
+        limit = self.config.disk_bytes_limit
+        if limit is None:
+            return
+        with self._lock:
+            spilled = sorted(
+                (s for s in self._sessions.values()
+                 if s.spill_path is not None),
+                key=lambda s: s.parked_at)
+            total = sum(s.nbytes for s in spilled)
+        while total > limit and spilled:
+            victim = spilled.pop(0)
+            if not self._push_remote(victim):
+                break                   # degraded: stays on disk
             total -= victim.nbytes
 
     def _spill(self, sess: ParkedSession) -> None:
+        """Disk tier: one checksummed blob file per session (shared
+        codec with the remote tier — remote/blob.py)."""
         path = os.path.join(self.config.spill_dir,
-                            f"kv_session_{sess.uid}.npz")
-        # uint8 views: np.savez would mangle ml_dtypes (bf16) leaves; the
-        # true dtype/shape stay in the in-memory _LeafRec metadata
-        np.savez(path, **{f"a{i}": sess.leaves[k].data.view(np.uint8)
-                          for i, k in enumerate(sess.order)})
-        for k in sess.order:
-            sess.leaves[k].data = None
-        sess.spill_path = path
+                            f"kv_session_{sess.uid}{SPILL_SUFFIX}")
+        blob = encode_session(sess)
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+        with self._lock:
+            if sess.uid not in self._sessions:      # dropped concurrently
+                os.remove(path)
+                return
+            for k in sess.order:
+                sess.leaves[k].data = None
+            sess.spill_path = path
         self._spills.inc()
         self._spilled_b.inc(sess.nbytes)
 
     def _load_spill(self, sess: ParkedSession) -> None:
-        with np.load(sess.spill_path) as z:
-            for i, k in enumerate(sess.order):
-                rec = sess.leaves[k]
-                raw = z[f"a{i}"]
-                flat = raw.view(rec.dtype)
-                if rec.page_len_key is None:
-                    rec.data = flat.reshape(rec.shape)
-                else:           # compacted: (n_occupied, dh)
-                    rec.data = flat.reshape(-1, rec.shape[-1])
+        with open(sess.spill_path, "rb") as f:
+            data = f.read()
+        decoded, _ = decode_session(data)   # CRC verified here
+        if decoded.order != sess.order:
+            raise ValueError(
+                f"spill file {sess.spill_path} does not match session "
+                f"{sess.uid}'s leaf order")
+        for k in sess.order:
+            sess.leaves[k].data = decoded.leaves[k].data
         os.remove(sess.spill_path)
         sess.spill_path = None
+
+    # -- remote tier -------------------------------------------------------
+    def _degrade(self, sess: ParkedSession, err: Exception) -> None:
+        self._degraded.inc()
+        with self._lock:
+            self._events.append({
+                "kind": "kvstore_remote_degraded", "uid": sess.uid,
+                "error": str(err)[:200],
+                "kept_tier": "disk" if sess.spill_path else "host"})
+
+    def _push_remote(self, sess: ParkedSession) -> bool:
+        """Push one session to the remote tier. On failure (after the
+        transport's own retries) the session keeps its current tier copy
+        — the disk file is only deleted after a successful put, so a
+        degraded push leaves the session exactly where it was, never
+        lost. True iff pushed."""
+        transport = self.config.remote
+        if sess.spill_path is not None:
+            # the spill file IS the blob format: forward its bytes as-is
+            # (the CRC written at spill time travels to the peer intact)
+            with open(sess.spill_path, "rb") as f:
+                blob = f.read()
+        else:
+            blob = encode_session(sess)
+        name = f"spill/{sess.uid}"
+        try:
+            transport.put(name, blob)
+        except (TransportError, OSError) as e:
+            self._degrade(sess, e)
+            return False
+        spill_path = None
+        with self._lock:
+            if sess.uid not in self._sessions:      # dropped concurrently
+                try:
+                    transport.delete(name)
+                except (TransportError, KeyError):
+                    pass
+                return True
+            for k in sess.order:
+                sess.leaves[k].data = None
+            sess.remote_name = name
+            spill_path, sess.spill_path = sess.spill_path, None
+        if spill_path and os.path.exists(spill_path):
+            os.remove(spill_path)
+        self._remote_parks.inc()
+        self._to_remote.inc(len(blob))
+        return True
+
+    def _fetch_remote(self, sess: ParkedSession) -> None:
+        blob = self.config.remote.get(sess.remote_name)
+        decoded, _ = decode_session(blob)   # CRC verified here
+        if decoded.order != sess.order:
+            raise ValueError(
+                f"remote blob {sess.remote_name!r} does not match "
+                f"session {sess.uid}'s leaf order")
+        for k in sess.order:
+            sess.leaves[k].data = decoded.leaves[k].data
+        try:
+            self.config.remote.delete(sess.remote_name)
+        except (TransportError, KeyError):
+            pass                        # best-effort remote GC
+        sess.remote_name = None
+        self._remote_resumes.inc()
+        self._from_remote.inc(len(blob))
+
+    # -- cross-process session movement (disaggregation rail) --------------
+    def export(self, uid: int, *, name: Optional[str] = None,
+               meta: Optional[dict] = None,
+               transport: Optional[Transport] = None) -> str:
+        """Serialize parked session ``uid`` (+ caller ``meta``) into one
+        blob and put it on the transport; the local copy is removed —
+        ownership moves to whoever imports the name. Returns the name."""
+        transport = transport if transport is not None else self.config.remote
+        if transport is None:
+            raise ValueError("export needs a transport "
+                             "(StoreConfig.remote or transport=...)")
+        self._wait_uid(uid)
+        with self._lock:
+            sess = self._sessions.get(uid)
+        if sess is None:
+            raise KeyError(f"no parked session {uid}")
+        if sess.remote_name is not None:
+            self._fetch_remote(sess)
+        if sess.spill_path is not None:
+            self._load_spill(sess)
+        name = name if name is not None else f"session/{uid}"
+        blob = encode_session(sess, meta=meta)
+        transport.put(name, blob)       # failure propagates; session kept
+        with self._lock:
+            self._sessions.pop(uid, None)
+        self._exports.inc()
+        self._to_remote.inc(len(blob))
+        self._update_gauges()
+        return name
+
+    def import_remote(self, name: str, *,
+                      transport: Optional[Transport] = None,
+                      consume: bool = True) -> Tuple[int, dict]:
+        """Fetch blob ``name``, verify it, and adopt the session into
+        the host tier. Returns ``(uid, meta)``; ``consume`` deletes the
+        blob after a successful import (ownership transferred)."""
+        transport = transport if transport is not None else self.config.remote
+        if transport is None:
+            raise ValueError("import_remote needs a transport "
+                             "(StoreConfig.remote or transport=...)")
+        blob = transport.get(name)
+        sess, meta = decode_session(blob)   # CRC verified here
+        self._wait_uid(sess.uid)
+        with self._lock:
+            if sess.uid in self._sessions:
+                raise ValueError(
+                    f"session {sess.uid} (blob {name!r}) is already "
+                    f"parked here")
+            sess.parked_at = time.perf_counter()
+            self._sessions[sess.uid] = sess
+        if consume:
+            try:
+                transport.delete(name)
+            except (TransportError, KeyError):
+                pass
+        self._imports.inc()
+        self._from_remote.inc(len(blob))
+        self._enforce_limit()
+        self._update_gauges()
+        return sess.uid, meta
 
     # -- observability -----------------------------------------------------
     def stats(self) -> Dict[str, float]:
         """Flat float map for engine_tick metrics."""
+        with self._lock:
+            inflight = float(len(self._inflight))
         out = {
-            "kvstore/sessions": float(len(self._sessions)),
+            "kvstore/sessions": float(len(self)),
+            "kvstore/inflight_parks": inflight,
             "kvstore/host_bytes": float(self.host_bytes),
             "kvstore/parks": self._parks.value,
             "kvstore/resumes": self._resumes.value,
@@ -270,9 +644,21 @@ class KVStore:
             "kvstore/bytes_to_device": self._to_dev.value,
             "kvstore/spills": self._spills.value,
             "kvstore/bytes_spilled": self._spilled_b.value,
+            "kvstore/bytes_to_remote": self._to_remote.value,
+            "kvstore/bytes_from_remote": self._from_remote.value,
+            "kvstore/remote_parks": self._remote_parks.value,
+            "kvstore/remote_resumes": self._remote_resumes.value,
+            "kvstore/exports": self._exports.value,
+            "kvstore/imports": self._imports.value,
+            "kvstore/remote_degraded": self._degraded.value,
+            "kvstore/prefetches": self._prefetches.value,
         }
-        for name, h in (("park", self._park_s), ("resume", self._resume_s)):
+        for name, h in (("park", self._park_s), ("resume", self._resume_s),
+                        ("park_transfer", self._transfer_s)):
             if h.count:
                 out[f"kvstore/{name}_p50_s"] = h.percentile(50)
                 out[f"kvstore/{name}_p99_s"] = h.percentile(99)
+        remote = self.config.remote
+        if remote is not None and hasattr(remote, "stats"):
+            out.update(remote.stats())
         return out

@@ -99,6 +99,25 @@ def decode_backends(cfg: ModelConfig, mesh=None) -> Dict[str, str]:
     return out
 
 
+def decode_cache_layouts(cfg: ModelConfig, mesh=None) -> set:
+    """The set of cache-layout names the decode stack uses (e.g.
+    {"append"}, {"ring", "pages"}). The engine's partial-prefix gate
+    keys off this: teacher-forcing a prompt tail over a cached prefix
+    is only bit-exact when every layout is in {"append", "ring"} —
+    cluster-page layouts route prefill (balanced top-k) and decode
+    (argmax) differently, so partial reuse would break the hit≡miss
+    byte-identity contract (DESIGN.md §11)."""
+    out = set()
+    for pattern, _ in build_segments(cfg):
+        for s in pattern:
+            if s.kind in ("attn", "moe"):
+                b = attn_api.decode_backend(spec_for_layer(cfg, s.attn),
+                                            mesh=mesh)
+                if b.layout is not None:
+                    out.add(b.layout.name)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Decode attention: one registry call per layer — the backend owns the
 # cache update semantics (append / ring / cluster pages)

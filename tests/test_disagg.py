@@ -1,0 +1,246 @@
+"""Disaggregated prefill/decode pools + partial-prefix reuse.
+
+The acceptance contract: splitting a workload across a prefill-pool
+engine and a decode-pool engine — sessions shipped between them as
+transport blobs — produces token streams *bit-identical* to one
+monolithic engine. And partial-prefix reuse (teacher-forced prompt
+tails over a cached shorter prefix) is bit-identical to a full prefill
+for the layouts it is enabled on, and disabled for cluster-page
+layouts, where it would not be.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig, RoutingConfig
+from repro.models.model import init_model
+from repro.serve.engine import InferenceEngine, Request
+from repro.serve.kvstore import KVStore, PrefixCache, StoreConfig
+from repro.serve.kvstore.remote import (FileTransport, LoopbackTransport,
+                                        TCPStoreServer, TCPTransport)
+from repro.serve.serving import decode_cache_layouts
+
+ROUTED = ModelConfig(name="dsg", family="dense", num_layers=2, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                     attention="local+routing",
+                     routing=RoutingConfig(num_clusters=4, local_window=8),
+                     dtype="float32")
+LOCAL = ModelConfig(name="dsl", family="dense", num_layers=2, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                    attention="local",
+                    routing=RoutingConfig(local_window=8),
+                    dtype="float32")
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def routed_model():
+    return init_model(ROUTED, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def local_model():
+    return init_model(LOCAL, jax.random.PRNGKey(0))
+
+
+def _mk_requests(n=6, seed=3, vocab=128):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=u, prompt=rng.randint(0, vocab, size=5 + 2 * u)
+                    .tolist(), max_new_tokens=4 + (u % 3))
+            for u in range(n)]
+
+
+def _monolithic(cfg, model, reqs):
+    params, kstate = model
+    eng = InferenceEngine(cfg, params, kstate, max_slots=2, max_len=MAX_LEN)
+    out = eng.run(reqs)
+    eng.close()
+    return out
+
+
+def _disaggregate(cfg, model, reqs, make_transport):
+    """Prefill pool -> transport blobs -> decode pool."""
+    params, kstate = model
+    pre = InferenceEngine(cfg, params, kstate, max_slots=2, max_len=MAX_LEN,
+                          kvstore=KVStore(StoreConfig(
+                              remote=make_transport())),
+                          prefill_only=True)
+    for r in reqs:
+        pre.submit(r)
+    while pre.has_work():
+        pre.step()
+    names = [pre.export_session(r.uid) for r in reqs]
+    assert all(r.state == "EXPORTED" for r in reqs)
+    pre.close()
+    dec = InferenceEngine(cfg, params, kstate, max_slots=2, max_len=MAX_LEN,
+                          kvstore=KVStore(StoreConfig(
+                              remote=make_transport(),
+                              async_transfers=True)))
+    handles = [dec.import_session(n) for n in names]
+    while dec.has_work():
+        dec.step()
+    dec.close()
+    return {h.uid: h.output for h in handles}
+
+
+# ---------------------------------------------------------------------------
+# Disaggregation parity (the tentpole's acceptance test)
+# ---------------------------------------------------------------------------
+def test_disagg_parity_loopback_routed(routed_model):
+    """Routing model through a shared loopback transport: every token
+    stream bit-identical to the monolithic engine."""
+    ref = _monolithic(ROUTED, routed_model, _mk_requests())
+    t = LoopbackTransport()
+    out = _disaggregate(ROUTED, routed_model, _mk_requests(), lambda: t)
+    assert out == ref
+
+
+def test_disagg_parity_file_transport(local_model, tmp_path):
+    """Two pools meeting in a shared directory (object-store semantics)."""
+    ref = _monolithic(LOCAL, local_model, _mk_requests(n=4))
+    out = _disaggregate(LOCAL, local_model, _mk_requests(n=4),
+                        lambda: FileTransport(str(tmp_path / "blobs")))
+    assert out == ref
+
+
+def test_disagg_parity_tcp(routed_model):
+    """Both pools talk to one TCP blob peer — the same rails the
+    two-process harness (examples/disaggregate.py) runs on."""
+    ref = _monolithic(ROUTED, routed_model, _mk_requests(n=4))
+    with TCPStoreServer() as server:
+        out = _disaggregate(
+            ROUTED, routed_model, _mk_requests(n=4),
+            lambda: TCPTransport(server.host, server.port))
+    assert out == ref
+
+
+def test_prefill_only_engine_parks_not_decodes(routed_model):
+    params, kstate = routed_model
+    eng = InferenceEngine(ROUTED, params, kstate, max_slots=2,
+                          max_len=MAX_LEN,
+                          kvstore=KVStore(StoreConfig(
+                              remote=LoopbackTransport())),
+                          prefill_only=True)
+    h = eng.submit(Request(uid=1, prompt=[3, 1, 4, 1, 5],
+                           max_new_tokens=8))
+    while eng.has_work():
+        eng.step()
+    # exactly the first (prefill-sampled) token, then parked held
+    assert h.state == "parked" and len(h.output) == 1
+    assert eng.metrics.decode_steps == 0
+    eng.close()
+
+
+def test_export_requires_prefilled_parked_session(routed_model):
+    params, kstate = routed_model
+    eng = InferenceEngine(ROUTED, params, kstate, max_slots=2,
+                          max_len=MAX_LEN,
+                          kvstore=KVStore(StoreConfig(
+                              remote=LoopbackTransport())))
+    h = eng.submit(Request(uid=1, prompt=[1, 2, 3], max_new_tokens=4))
+    with pytest.raises(ValueError, match="not parked"):
+        eng.export_session(1)
+    eng.step()
+    h.park()
+    name = eng.export_session(1)
+    assert h.state == "exported"
+    with pytest.raises(ValueError, match="not parked"):
+        eng.export_session(1)           # already gone
+    eng.close()
+    assert name
+
+
+def test_import_collision_rejected(routed_model):
+    params, kstate = routed_model
+    t = LoopbackTransport()
+    eng = InferenceEngine(ROUTED, params, kstate, max_slots=2,
+                          max_len=MAX_LEN,
+                          kvstore=KVStore(StoreConfig(remote=t)))
+    h = eng.submit(Request(uid=1, prompt=[1, 2, 3], max_new_tokens=4))
+    eng.step()
+    h.park()
+    name = eng.export_session(1)
+    eng.submit(Request(uid=1, prompt=[9, 9], max_new_tokens=2))
+    with pytest.raises(ValueError, match="collides"):
+        eng.import_session(name)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Partial-prefix reuse (satellite)
+# ---------------------------------------------------------------------------
+def test_partial_prefix_gate_by_layout(routed_model, local_model):
+    """Enabled iff every decode cache layout teacher-forces bit-exact:
+    ring/append yes, cluster pages no."""
+    assert decode_cache_layouts(LOCAL) == {"ring"}
+    assert decode_cache_layouts(ROUTED) == {"ring+pages"}
+    p, k = local_model
+    on = InferenceEngine(LOCAL, p, k, max_slots=2, max_len=MAX_LEN,
+                         prefix_cache=PrefixCache())
+    assert on._partial_prefix
+    on.close()
+    p, k = routed_model
+    off = InferenceEngine(ROUTED, p, k, max_slots=2, max_len=MAX_LEN,
+                          prefix_cache=PrefixCache())
+    assert not off._partial_prefix
+    off.close()
+
+
+def test_partial_prefix_hit_matches_full_prefill(local_model):
+    """A prompt extending a cached shorter prefix decodes bit-identically
+    to an engine that prefilled it from scratch."""
+    params, kstate = local_model
+    rng = np.random.RandomState(7)
+    base = rng.randint(0, 128, size=13).tolist()
+    tails = ([17], [41, 2], [3, 99, 64])
+
+    ref = _monolithic(
+        LOCAL, local_model,
+        [Request(uid=i, prompt=base + t, max_new_tokens=5)
+         for i, t in enumerate(tails)])
+
+    pc = PrefixCache()
+    eng = InferenceEngine(LOCAL, params, kstate, max_slots=2,
+                          max_len=MAX_LEN, prefix_cache=pc)
+    eng.run([Request(uid=100, prompt=base, max_new_tokens=1)])  # seed
+    out = eng.run([Request(uid=i, prompt=base + t, max_new_tokens=5)
+                   for i, t in enumerate(tails)])
+    eng.close()
+    assert {i: out[i] for i in range(len(tails))} == ref
+    assert pc.stats()["kvstore/prefix_partial_hits"] >= 1.0
+
+
+def test_partial_prefix_extends_cache_for_exact_hits(local_model):
+    """After a partial hit, the extended full prompt is cached: the same
+    prompt next time is an exact hit (no teacher-forcing)."""
+    params, kstate = local_model
+    pc = PrefixCache()
+    eng = InferenceEngine(LOCAL, params, kstate, max_slots=2,
+                          max_len=MAX_LEN, prefix_cache=pc)
+    base = [5, 6, 7, 8, 9]
+    eng.run([Request(uid=1, prompt=base, max_new_tokens=1)])
+    eng.run([Request(uid=2, prompt=base + [1, 2], max_new_tokens=2)])
+    partial_before = pc.stats()["kvstore/prefix_partial_hits"]
+    out3 = eng.run([Request(uid=3, prompt=base + [1, 2], max_new_tokens=2)])
+    out4 = eng.run([Request(uid=4, prompt=base + [1, 2], max_new_tokens=2)])
+    eng.close()
+    assert pc.stats()["kvstore/prefix_partial_hits"] == partial_before
+    assert pc.stats()["kvstore/prefix_hits"] >= 2.0
+    assert out3[3] == out4[4]
+
+
+def test_routed_model_exact_hits_still_work(routed_model):
+    """With the partial gate off, exact full-prompt hits keep the PR 7
+    behavior: hit output == miss output."""
+    params, kstate = routed_model
+    pc = PrefixCache()
+    eng = InferenceEngine(ROUTED, params, kstate, max_slots=2,
+                          max_len=MAX_LEN, prefix_cache=pc)
+    prompt = [11, 22, 33, 44, 55, 66]
+    a = eng.run([Request(uid=1, prompt=prompt, max_new_tokens=6)])
+    b = eng.run([Request(uid=2, prompt=prompt, max_new_tokens=6)])
+    eng.close()
+    assert a[1] == b[2]
+    assert pc.stats()["kvstore/prefix_hits"] == 1.0
+    assert pc.stats()["kvstore/prefix_partial_hits"] == 0.0

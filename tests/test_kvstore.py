@@ -97,17 +97,17 @@ def test_park_duplicate_and_resume_missing_raise(model):
 # Disk tier
 # ---------------------------------------------------------------------------
 def test_disk_spill_roundtrip_bitexact(model, tmp_path):
-    """host_bytes_limit=1 forces every park straight to npz; the resumed
+    """host_bytes_limit=1 forces every park straight to disk; the resumed
     lane is still byte-identical (uint8-view storage is dtype-proof) and
     the spill file is reclaimed."""
     lane = _prefilled_lane(model)
     store = KVStore(StoreConfig(spill_dir=str(tmp_path), host_bytes_limit=1))
     store.park(3, lane)
-    spilled = list(tmp_path.glob("kv_session_*.npz"))
+    spilled = list(tmp_path.glob("kv_session_*.blob"))
     assert len(spilled) == 1
     assert store.stats()["kvstore/spills"] == 1.0
     _assert_tree_equal(lane, store.resume(3))
-    assert list(tmp_path.glob("kv_session_*.npz")) == []
+    assert list(tmp_path.glob("kv_session_*.blob")) == []
 
 
 def test_spill_is_lru_and_respects_limit(model, tmp_path):

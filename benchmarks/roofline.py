@@ -251,7 +251,108 @@ def markdown_table(rows: Dict[str, Dict], mesh: str = "pod") -> str:
     return hdr + "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Attention-op roofline: routing (paged fused) vs flash, the O(n^1.5)
+# crossover (§Roofline, op level — feeds BENCH_routing.json)
+# ---------------------------------------------------------------------------
+ATTN_SEQ_LENS = (1024, 4096, 8192, 16384, 32768)
+
+
+def _attn_terms(N: int, B: int, H: int, dh: int, impl: str,
+                dtype_bytes: float = 2.0) -> Dict:
+    """Analytic FLOPs + HBM bytes for one attention op at sequence N.
+
+    ``flash``    full causal: every query scores N/2 keys -> O(n^2) FLOPs;
+                 q/k/v/o planes streamed once -> 4*N*dh bytes/head.
+    ``routing``  paged fused kernel, paper scaling kc = w = sqrt(N):
+                 each query scores w/2 in-cluster keys (causal half) plus
+                 the n x kc assignment matmul -> O(n^1.5) FLOPs. The pager
+                 streams each sequence row into VMEM exactly once per
+                 membership (per-row DMA), so bytes stay the same four
+                 planes as flash + 4-byte membership indices — no
+                 N-resident VMEM term and no gathered copies.
+    ``gathered`` same FLOPs as routing, but the XLA gather materializes
+                 (B,H,kc,w,dh) copies of q/k/v in HBM: one extra write +
+                 one extra read of three planes (and the output scatter),
+                 ~3x the plane traffic the fused kernel pays.
+    """
+    w = max(1.0, math.sqrt(N))
+    kc = N / w
+    plane = B * H * N * dh * dtype_bytes
+    if impl == "flash":
+        flops = 4.0 * B * H * N * (N / 2.0) * dh
+        bytes_ = 4.0 * plane
+    else:
+        flops = (4.0 * B * H * N * (w / 2.0) * dh        # in-cluster scores
+                 + 2.0 * B * H * N * kc * dh)            # assignment matmul
+        bytes_ = 4.0 * plane + B * H * N * 4.0           # + int32 members
+        if impl == "gathered":
+            bytes_ += 2.0 * 3.0 * plane + plane          # copy w+r, scatter
+    t_c, t_m = flops / PEAK_FLOPS, bytes_ / HBM_BW
+    return {"flops": flops, "hbm_bytes": bytes_,
+            "compute_s": t_c, "memory_s": t_m,
+            "est_s": max(t_c, t_m),
+            "bound": "compute" if t_c >= t_m else "memory"}
+
+
+def attention_roofline(B: int = 1, H: int = 8, dh: int = 128,
+                       seq_lens=ATTN_SEQ_LENS,
+                       dtype_bytes: float = 2.0) -> Dict:
+    """Routing-vs-flash roofline across N + the predicted crossover: the
+    smallest N where the routing op's est time beats flash on a v5e.
+    Below it both ops sit on the same memory roof (identical plane
+    traffic) and flash's simpler schedule wins in practice; past it
+    flash goes compute-bound on its O(n^2) term while routing stays on
+    the O(n^1.5) curve — est_s ratios grow ~sqrt(N) from there."""
+    points = []
+    for N in seq_lens:
+        row = {"N": N}
+        for impl in ("flash", "routing", "gathered"):
+            row[impl] = _attn_terms(N, B, H, dh, impl, dtype_bytes)
+        row["routing_speedup_vs_flash"] = round(
+            row["flash"]["est_s"] / row["routing"]["est_s"], 3)
+        row["paged_vs_gathered_bytes"] = round(
+            row["gathered"]["hbm_bytes"] / row["routing"]["hbm_bytes"], 3)
+        points.append(row)
+    crossover = None
+    for N in range(256, max(seq_lens) + 1, 256):
+        if (_attn_terms(N, B, H, dh, "routing", dtype_bytes)["est_s"]
+                < _attn_terms(N, B, H, dh, "flash", dtype_bytes)["est_s"]):
+            crossover = N
+            break
+    return {"arch": "tpu_v5e",
+            "peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+            "shape": {"B": B, "H": H, "dh": dh,
+                      "dtype_bytes": dtype_bytes,
+                      "window": "sqrt(N)"},
+            "predicted_crossover_n": crossover,
+            "points": points}
+
+
+def attention_markdown(rec: Dict) -> str:
+    hdr = ("| N | flash est s | routing est s | flash bound | "
+           "routing bound | routing speedup | gathered/paged bytes |\n"
+           "|---|---|---|---|---|---|---|\n")
+    lines = []
+    for p in rec["points"]:
+        lines.append(
+            f"| {p['N']} | {p['flash']['est_s']:.2e} "
+            f"| {p['routing']['est_s']:.2e} "
+            f"| {p['flash']['bound'][:4]} | {p['routing']['bound'][:4]} "
+            f"| {p['routing_speedup_vs_flash']:.2f}x "
+            f"| {p['paged_vs_gathered_bytes']:.2f}x |")
+    return hdr + "\n".join(lines)
+
+
 def main():
+    import sys
+    if "--attention" in sys.argv[1:]:
+        rec = attention_roofline()
+        print(f"attention roofline (v5e, w = sqrt(N)); predicted "
+              f"routing-beats-flash crossover at N = "
+              f"{rec['predicted_crossover_n']}")
+        print(attention_markdown(rec))
+        return
     rows = build()
     with open(OUT, "w") as f:
         json.dump(rows, f, indent=1)

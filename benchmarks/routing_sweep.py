@@ -3,8 +3,24 @@
 One row per (sequence length, impl) through the full ``routed_attention``
 module (shared-QK causal, k = sqrt-ish clusters of window 256), measuring
 tok/s of the jitted call and peak memory (XLA ``memory_analysis`` temp +
-output bytes). The same record is written to ``BENCH_routing.json`` at the
-repo root — the perf-trajectory baseline for the routing hot-spot.
+output bytes). Impls cover both memory plans of the fused kernel —
+``pallas_fused_paged`` (double-buffered per-row DMA, no VMEM residency
+cliff) and ``pallas_fused_unpaged`` (whole-plane resident) — next to the
+auto-switching ``pallas_fused``, the gathered ``pallas`` kernel and the
+``xla`` reference. Every row carries the device kind and whether the
+kernel ran in interpret mode, so hardware and CI numbers are never
+conflated in the trend line.
+
+The same record is written to ``BENCH_routing.json`` at the repo root —
+the perf-trajectory baseline for the routing hot-spot — together with
+the analytic routing-vs-flash roofline (benchmarks/roofline.py
+``attention_roofline``), whose predicted O(n^1.5)-vs-O(n^2) crossover
+carries the at-scale speed story that CPU wall-clock cannot.
+
+``check=True`` gates the sweep: every impl's output must match the xla
+reference (always), and on real TPU hardware the paged fused rows must
+not be slower than the gathered kernel (tok/s ordering is only asserted
+when the platform is ``tpu``; see the interpret-mode caveat below).
 
 Interpret-mode caveat (CPU CI, this container): the Pallas rows execute
 the kernel bodies via the interpreter, where the fused kernel's in-VMEM
@@ -33,7 +49,9 @@ Row = Tuple[str, float, str]
 B, H, DH = 1, 2, 64
 WINDOW = 256
 SEQ_LENS = (1024, 4096, 8192)
-IMPLS = ("xla", "pallas", "pallas_fused")
+IMPLS = ("xla", "pallas", "pallas_fused", "pallas_fused_paged",
+         "pallas_fused_unpaged")
+CHECK_TOL = 2e-4
 JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_routing.json"
 
 
@@ -45,18 +63,35 @@ def _peak_bytes(compiled) -> int:
         return 0
 
 
-def routing_sweep_rows(iters: int = 3,
-                       seq_lens=SEQ_LENS) -> Tuple[List[Row], dict]:
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
+def routing_sweep_rows(iters: int = 3, seq_lens=SEQ_LENS,
+                       check: bool = False) -> Tuple[List[Row], dict]:
+    from benchmarks.roofline import attention_roofline
+    platform = jax.default_backend()
+    interpret = platform != "tpu"
+    device = _device_kind()
     rows: List[Row] = []
     record = {
         "shape": {"B": B, "H": H, "dh": DH, "window": WINDOW},
-        "platform": jax.default_backend(),
-        "interpret": jax.default_backend() != "tpu",
+        "platform": platform,
+        "device_kind": device,
+        "interpret": interpret,
         "note": ("interpret-mode wall-clock (CPU): fused in-kernel row "
                  "pulls are interpreter-slow, so tok/s inverts vs "
                  "hardware; the fused win is the gathered-copy drop in "
-                 "peak_mb (and HBM bandwidth on TPU)"),
+                 "peak_mb (and HBM bandwidth on TPU) — the at-scale "
+                 "speed story is the analytic crossover under "
+                 "'roofline'"),
+        "checked": bool(check),
         "points": [],
+        # analytic routing-vs-flash model + predicted O(n^1.5) crossover
+        "roofline": attention_roofline(),
     }
     for N in seq_lens:
         kc = max(2, N // WINDOW)
@@ -65,14 +100,24 @@ def routing_sweep_rows(iters: int = 3,
         v = jax.random.normal(ks[1], (B, H, N, DH))
         st = init_kmeans(ks[2], H, kc, DH)
         cfg = RoutingConfig(num_clusters=kc)
-        point = {"N": N, "clusters": kc, "impls": {}}
+        point = {"N": N, "clusters": kc, "device_kind": device,
+                 "interpret": interpret, "impls": {}}
+        ref_out = None
         for impl in IMPLS:
             fn = jax.jit(lambda q, v, impl=impl: routed_attention(
                 q, None, v, st, cfg, update_state=False, impl=impl).out)
             # one AOT compile serves both memory_analysis and timing
             compiled = fn.lower(q, v).compile()
             peak = _peak_bytes(compiled)
-            jax.block_until_ready(compiled(q, v))
+            out = compiled(q, v)
+            jax.block_until_ready(out)
+            if impl == "xla":
+                ref_out = out
+            maxdiff = float(jax.numpy.abs(out - ref_out).max())
+            if check and maxdiff >= CHECK_TOL:
+                raise SystemExit(
+                    f"routing sweep parity check failed: N={N} impl="
+                    f"{impl} maxdiff {maxdiff:.2e} >= {CHECK_TOL:.0e}")
             ts = []
             for _ in range(iters):
                 t0 = time.perf_counter()
@@ -81,15 +126,24 @@ def routing_sweep_rows(iters: int = 3,
             us = float(np.median(ts) * 1e6)
             tok_s = B * N / (us / 1e6)
             rows.append((f"routing_sweep/N{N}:{impl}", us,
-                         f"tok_s={tok_s:.0f};peak_mb={peak / 2**20:.1f}"))
+                         f"tok_s={tok_s:.0f};peak_mb={peak / 2**20:.1f};"
+                         f"device={device};interpret={interpret}"))
             point["impls"][impl] = {"us_per_call": round(us, 1),
                                     "tok_s": round(tok_s),
-                                    "peak_bytes": peak}
-        g, f = point["impls"]["pallas"], point["impls"]["pallas_fused"]
+                                    "peak_bytes": peak,
+                                    "maxdiff_vs_xla": maxdiff}
+        g = point["impls"]["pallas"]
+        f = point["impls"]["pallas_fused"]
+        p = point["impls"]["pallas_fused_paged"]
         point["fused_speedup_tok_s"] = round(f["tok_s"] / g["tok_s"], 3)
+        point["paged_speedup_tok_s"] = round(p["tok_s"] / g["tok_s"], 3)
         point["fused_peak_ratio"] = (
             round(f["peak_bytes"] / g["peak_bytes"], 3)
             if g["peak_bytes"] else None)
+        if check and platform == "tpu" and p["tok_s"] < g["tok_s"]:
+            raise SystemExit(
+                f"routing sweep perf check failed on tpu: N={N} paged "
+                f"fused {p['tok_s']} tok/s < gathered {g['tok_s']} tok/s")
         record["points"].append(point)
     return rows, record
 
@@ -99,8 +153,9 @@ def write_json(record: dict, path: Path = JSON_PATH) -> None:
 
 
 if __name__ == "__main__":
+    import sys
     print("name,us_per_call,derived")
-    all_rows, record = routing_sweep_rows()
+    all_rows, record = routing_sweep_rows(check="--check" in sys.argv[1:])
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")
     write_json(record)

@@ -12,10 +12,14 @@ show up in the same report tables; ``--backend-sweep-only`` skips the
 paper tables (fast per-push trend line).
 
 ``--routing-sweep`` appends the gathered-vs-fused routing kernel rows
-across N in {1k, 4k, 8k} (tok/s + memory_analysis peak) and rewrites
-``BENCH_routing.json`` at the repo root — the routing hot-spot's perf
-trajectory; ``--routing-sweep-only`` runs just that (the push-time CI
-bench job).
+across N in {1k, 4k, 8k} x {xla, pallas, pallas_fused, and both forced
+fused memory plans} (tok/s + memory_analysis peak + device kind +
+interpret flag) and rewrites ``BENCH_routing.json`` at the repo root —
+the routing hot-spot's perf trajectory, including the analytic
+routing-vs-flash roofline crossover; ``--routing-sweep-only`` runs just
+that (the push-time CI bench job). ``--routing-check`` additionally
+gates the sweep: output parity vs the xla reference always, and
+paged-fused >= gathered tok/s when running on real TPU hardware.
 
 ``--obs-sweep`` appends routing-health telemetry rows (occupancy entropy
 vs log k, dead clusters, balanced-vs-nearest mismatch, sampled attention
@@ -26,7 +30,7 @@ import sys
 
 
 FLAGS = ("--backend-sweep", "--backend-sweep-only",
-         "--routing-sweep", "--routing-sweep-only",
+         "--routing-sweep", "--routing-sweep-only", "--routing-check",
          "--obs-sweep", "--obs-sweep-only")
 
 
@@ -36,7 +40,9 @@ def main(argv=None) -> None:
     if unknown:
         raise SystemExit(f"unknown arguments {unknown}; known: {FLAGS}")
     sweep = "--backend-sweep" in argv or "--backend-sweep-only" in argv
-    routing = "--routing-sweep" in argv or "--routing-sweep-only" in argv
+    routing_check = "--routing-check" in argv
+    routing = ("--routing-sweep" in argv or "--routing-sweep-only" in argv
+               or routing_check)
     obs = "--obs-sweep" in argv or "--obs-sweep-only" in argv
     # any -only flag skips the paper tables; the sweeps themselves compose
     tables = not any(a.endswith("-only") for a in argv)
@@ -54,7 +60,7 @@ def main(argv=None) -> None:
             sys.stdout.flush()
     if routing:
         from benchmarks.routing_sweep import routing_sweep_rows, write_json
-        rows, record = routing_sweep_rows()
+        rows, record = routing_sweep_rows(check=routing_check)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()

@@ -15,15 +15,25 @@ Registered pairs (variant, impl):
   routing/pallas_fused   gather-free fused kernel: sequence-layout q/k/v,
                      membership via scalar prefetch — no (B,H,k,w,dh)
                      q/k/v intermediates in HBM (DESIGN.md §9); preferred
-                     over routing/pallas on TPU (priority 20 vs 10)
+                     over routing/pallas on TPU (priority 20 vs 10). The
+                     kernel's memory plan auto-switches past the VMEM
+                     residency budget to double-buffered per-row DMA
+                     paging, so there is no seq-length registration cliff
+  routing/pallas_fused_paged / _unpaged   forced memory plans of the same
+                     kernel (priority 0 — explicit ``impl=`` only); the
+                     unpaged one keeps the old ``max_seq_elems`` cap
+                     because whole-plane residency genuinely overflows
+                     VMEM past it
   routing/pallas_paged   fused apply + the paged-decode kernel
                      (kernels.routing_decode): single-token decode DMAs
                      only the selected cluster page into VMEM via
                      scalar-prefetched page tables — decode is gather-
                      free too, and resolves here on TPU (priority 20)
   local+routing/xla      paper head split, both halves reference
-  local+routing/pallas   local half reference, routing blocks on Pallas
-  local+routing/pallas_fused  local half reference, routing half fused
+  local+routing/pallas   local half on the Pallas window kernel, routing
+                     blocks on the gathered Pallas kernel
+  local+routing/pallas_fused  both halves Pallas: window kernel + fused
+                     routing (plus the forced _paged/_unpaged variants)
   local+routing/pallas_paged  fused apply; decode = ring-local reference
                      + paged routing kernel
 
@@ -64,6 +74,7 @@ from repro.core.attention import full_attention
 from repro.core.kmeans import KMeansState, normalize_routing
 from repro.core.local import local_attention
 from repro.core.routing import routed_attention
+from repro.kernels.common import FUSED_RESIDENT_ELEMS
 from repro.models import layers as L
 
 _BIG_NEG = -1e9
@@ -179,14 +190,30 @@ def _make_routing_apply(kernel_impl: str):
     return apply
 
 
-def _make_mixed_apply(kernel_impl: str):
+def _make_mixed_apply(kernel_impl: str, local_kernel: bool = False):
+    """Composite apply for the local+routing head split.
+
+    ``local_kernel=True`` (every Pallas-family registration) runs the
+    local half on the Pallas window kernel — which carries its own
+    flash-style custom VJP, so the composite gradient is kernel-backed
+    end to end instead of mixing a fused routing grad with the XLA-
+    reference local grad. The window kernel's affine BlockSpec pipeline
+    already double-buffers its (w, dh) tiles, so its VMEM footprint is
+    bounded by the window, never by N — it needs no manual paging. The
+    reference serves the cases the kernel does not express (pad_mask,
+    N not a multiple of the window)."""
     routing_apply = _make_routing_apply(kernel_impl)
 
     def apply(spec, q, k, v, *, state=None, positions=None, pad_mask=None,
               update_state=True, interpret=None):
         (ql, kl, vl), (qr, kr, vr) = _split_heads(spec, q, k, v)
-        o_l, _ = _local_xla_apply(
-            _local_subspec(spec), ql, kl, vl, positions=positions,
+        lspec = _local_subspec(spec)
+        N = q.shape[2]
+        use_kernel = (local_kernel and pad_mask is None
+                      and N % min(lspec.window, N) == 0)
+        local_fn = _local_pallas_apply if use_kernel else _local_xla_apply
+        o_l, _ = local_fn(
+            lspec, ql, kl, vl, positions=positions,
             pad_mask=pad_mask, interpret=interpret)
         o_r, new_mu, stats = routing_apply(
             _routing_subspec(spec), qr, kr, vr, state=state,
@@ -523,20 +550,38 @@ registry.register(Backend(
 # supports_mesh=False like every Pallas backend: a GSPMD mesh call falls
 # back to the reference; the shard_map train path (per-device programs,
 # no mesh at attend) runs the kernel in distributed training (§9).
-# max_seq_elems: the kernel keeps the full (N,dh) q/k/v sequence planes
-# VMEM-resident (DESIGN.md §9: 3·N·dh·4B per plane set; N·dh = 1M fp32
-# is ~12 MiB of v5e's ~16 MiB — N=8k at dh=128, N=4k at dh=256). Beyond
-# the budget, auto-selection falls back to the per-tile gathered kernel
-# instead of failing Mosaic compilation on VMEM overflow; the cap is
-# per-(seq_len · head_dim), so wide heads shrink the legal N.
-_FUSED_MAX_ELEMS = 8192 * 128
-
+# No max_seq_elems cap: the kernel auto-switches its memory plan at the
+# VMEM residency budget (kernels.common.FUSED_RESIDENT_ELEMS, N·dh =
+# 8192·128) — whole-plane VMEM residency below it, double-buffered
+# per-row DMA paging above (VMEM bounded by the tile sizes, not N), so
+# paper-scale N=8k–32k stays fused forward and backward.
 registry.register(Backend(
     variant="routing", impl="pallas_fused",
     apply=_make_routing_apply("pallas_fused"), priority=20,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
                       supports_pad_mask=True, supports_grad=True,
-                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
+                      needs_tpu=True)))
+
+# forced memory plans of the fused kernel, priority 0: never auto-chosen
+# (tie with xla resolves to the earlier registration), reachable with an
+# explicit impl= — the parity matrix and benches exercise both plans this
+# way. Only the unpaged one still carries the residency cap: whole-plane
+# VMEM residency genuinely overflows past it, and resolve() now names
+# the fallback in the forced-impl error instead of stranding the caller.
+registry.register(Backend(
+    variant="routing", impl="pallas_fused_paged",
+    apply=_make_routing_apply("pallas_fused_paged"), priority=0,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True)))
+
+registry.register(Backend(
+    variant="routing", impl="pallas_fused_unpaged",
+    apply=_make_routing_apply("pallas_fused_unpaged"), priority=0,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True,
+                      max_seq_elems=FUSED_RESIDENT_ELEMS)))
 
 registry.register(Backend(
     variant="local+routing", impl="xla", apply=_make_mixed_apply("xla"),
@@ -546,17 +591,35 @@ registry.register(Backend(
 
 registry.register(Backend(
     variant="local+routing", impl="pallas",
-    apply=_make_mixed_apply("pallas"), priority=10,
+    apply=_make_mixed_apply("pallas", local_kernel=True), priority=10,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
                       supports_pad_mask=True, supports_grad=True,
                       needs_tpu=True)))
 
 registry.register(Backend(
     variant="local+routing", impl="pallas_fused",
-    apply=_make_mixed_apply("pallas_fused"), priority=20,
+    apply=_make_mixed_apply("pallas_fused", local_kernel=True),
+    priority=20,
     caps=Capabilities(supports_decode=False, supports_mesh=False,
                       supports_pad_mask=True, supports_grad=True,
-                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
+                      needs_tpu=True)))
+
+registry.register(Backend(
+    variant="local+routing", impl="pallas_fused_paged",
+    apply=_make_mixed_apply("pallas_fused_paged", local_kernel=True),
+    priority=0,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True)))
+
+registry.register(Backend(
+    variant="local+routing", impl="pallas_fused_unpaged",
+    apply=_make_mixed_apply("pallas_fused_unpaged", local_kernel=True),
+    priority=0,
+    caps=Capabilities(supports_decode=False, supports_mesh=False,
+                      supports_pad_mask=True, supports_grad=True,
+                      needs_tpu=True,
+                      max_seq_elems=FUSED_RESIDENT_ELEMS)))
 
 # paged decode: fused apply plus the paged-decode kernel, so the serving
 # hot path is Pallas too. Registered AFTER pallas_fused at the same
@@ -572,12 +635,12 @@ registry.register(Backend(
     decode=_routing_decode_paged, layout=PAGES_LAYOUT, priority=20,
     caps=Capabilities(supports_decode=True, supports_mesh=False,
                       supports_pad_mask=True, supports_grad=True,
-                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
+                      needs_tpu=True)))
 
 registry.register(Backend(
     variant="local+routing", impl="pallas_paged",
-    apply=_make_mixed_apply("pallas_fused"),
+    apply=_make_mixed_apply("pallas_fused", local_kernel=True),
     decode=_mixed_decode_paged, layout=MIXED_LAYOUT, priority=20,
     caps=Capabilities(supports_decode=True, supports_mesh=False,
                       supports_pad_mask=True, supports_grad=True,
-                      needs_tpu=True, max_seq_elems=_FUSED_MAX_ELEMS)))
+                      needs_tpu=True)))

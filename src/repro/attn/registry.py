@@ -17,7 +17,14 @@ the CPU kernel-parity CI lane exercises). Every *other* capability
 mismatch on an explicit ``impl=`` override is a loud
 ``BackendResolutionError`` — a forced backend silently computing the
 wrong thing (ignoring padding, lacking a decode path) is the failure
-mode this registry exists to kill.
+mode this registry exists to kill; the error also names the backend
+auto-selection would have used, so the caller knows the escape hatch.
+
+Auto-selection that skips a higher-priority backend *purely on sequence
+capacity* (``max_seq`` / ``max_seq_elems``) is not silent either: each
+occurrence increments the obs ``attn/fallback`` counter and the first
+occurrence per (excluded, chosen) pair emits a RuntimeWarning — a call
+landing on a slower path at scale leaves a signal.
 """
 from __future__ import annotations
 
@@ -296,6 +303,54 @@ def pageable_cache_leaves() -> Dict[str, str]:
     return out
 
 
+def _capacity_gaps(b: Backend, *, seq_len: Optional[int],
+                   head_dim: int) -> List[str]:
+    """Sequence-capacity gaps only (max_seq / max_seq_elems) — the class
+    of exclusion that silently degrades an otherwise-eligible backend at
+    scale, which auto-selection reports through obs (see resolve)."""
+    gaps = []
+    if (seq_len is not None and b.caps.max_seq is not None
+            and seq_len > b.caps.max_seq):
+        gaps.append(f"seq_len {seq_len} exceeds max_seq {b.caps.max_seq}")
+    if (seq_len is not None and b.caps.max_seq_elems is not None
+            and seq_len * head_dim > b.caps.max_seq_elems):
+        gaps.append(
+            f"seq_len x head_dim {seq_len}x{head_dim} exceeds "
+            f"max_seq_elems {b.caps.max_seq_elems} (the backend's "
+            f"resident-plane budget)")
+    return gaps
+
+
+_FALLBACK_WARNED: set = set()
+
+
+def _note_capacity_fallback(excluded: List[Backend], chosen: Backend,
+                            gap_kw) -> None:
+    """A strictly-higher-priority backend lost to ``chosen`` purely on
+    sequence capacity: count it (obs ``attn/fallback``) and warn once per
+    (excluded, chosen) pair — the N=8k-silently-lands-on-the-gathered-
+    path failure mode gets a signal instead of a mystery slowdown."""
+    from repro.obs import default_registry
+    for b in excluded:
+        cap = _capacity_gaps(b, seq_len=gap_kw["seq_len"],
+                             head_dim=gap_kw["head_dim"])
+        other = [g for g in _gaps(b, forced=False, **gap_kw)
+                 if g not in cap]
+        if not cap or other:
+            continue   # excluded for a non-capacity reason too — normal
+        default_registry().counter("attn/fallback").inc()
+        key = (b.name, chosen.name)
+        if key not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(key)
+            warnings.warn(
+                f"attn auto-selection fell back from {b.name} "
+                f"(priority {b.priority}) to {chosen.name} "
+                f"(priority {chosen.priority}): {'; '.join(cap)}. "
+                f"Further fallbacks of this pair are counted on the obs "
+                f"'attn/fallback' counter without re-warning.",
+                RuntimeWarning, stacklevel=3)
+
+
 def _gaps(b: Backend, *, decode: bool, padded: bool,
           positioned: bool, scaled: bool, needs_grad: bool,
           seq_len: Optional[int], head_dim: int, mesh_devices: int,
@@ -321,15 +376,7 @@ def _gaps(b: Backend, *, decode: bool, padded: bool,
     if mesh_devices > 1 and not b.caps.supports_mesh:
         gaps.append(f"call runs on a {mesh_devices}-device mesh but "
                     f"supports_mesh=False")
-    if (seq_len is not None and b.caps.max_seq is not None
-            and seq_len > b.caps.max_seq):
-        gaps.append(f"seq_len {seq_len} exceeds max_seq {b.caps.max_seq}")
-    if (seq_len is not None and b.caps.max_seq_elems is not None
-            and seq_len * head_dim > b.caps.max_seq_elems):
-        gaps.append(
-            f"seq_len x head_dim {seq_len}x{head_dim} exceeds "
-            f"max_seq_elems {b.caps.max_seq_elems} (the backend's "
-            f"resident-plane budget)")
+    gaps += _capacity_gaps(b, seq_len=seq_len, head_dim=head_dim)
     if not forced and b.caps.needs_tpu and platform != "tpu":
         gaps.append(f"needs_tpu on platform {platform!r}")
     return gaps
@@ -359,9 +406,19 @@ def resolve(spec: AttentionSpec, *, decode: bool = False,
         b = get(spec.variant, impl)
         gaps = _gaps(b, forced=True, **gap_kw)
         if gaps:
-            raise BackendResolutionError(
-                f"forced backend {b.name} cannot serve this call:\n  - "
-                + "\n  - ".join(gaps))
+            msg = (f"forced backend {b.name} cannot serve this call:\n  - "
+                   + "\n  - ".join(gaps))
+            try:
+                alt = resolve(spec, decode=decode, padded=padded,
+                              positioned=positioned, needs_grad=needs_grad,
+                              seq_len=seq_len, mesh=mesh, impl=None,
+                              platform=platform)
+            except BackendResolutionError:
+                alt = None
+            if alt is not None:
+                msg += (f"\nauto-selection (impl=None) would serve this "
+                        f"call with {alt.name}")
+            raise BackendResolutionError(msg)
         return b
     cands = backends_for(spec.variant)
     if not cands:
@@ -376,4 +433,8 @@ def resolve(spec: AttentionSpec, *, decode: bool = False,
         raise BackendResolutionError(
             f"no registered backend for variant {spec.variant!r} covers "
             f"this call ({detail})")
-    return max(ok, key=lambda b: b.priority)
+    chosen = max(ok, key=lambda b: b.priority)
+    skipped = [b for b in cands if b.priority > chosen.priority]
+    if skipped:
+        _note_capacity_fallback(skipped, chosen, gap_kw)
+    return chosen

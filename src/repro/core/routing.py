@@ -37,6 +37,12 @@ from repro.core.kmeans import (KMeansState, cluster_scores, ema_update,
 
 _BIG_NEG = -1e9
 
+# fused-kernel impl names -> the `paged` argument of the kernel entry
+# point (None = auto-switch on the VMEM residency budget)
+_FUSED_IMPLS = {"pallas_fused": None,
+                "pallas_fused_paged": True,
+                "pallas_fused_unpaged": False}
+
 
 class RoutingOutput(NamedTuple):
     out: jax.Array                      # (B, H, N, dh)
@@ -114,7 +120,10 @@ def routed_attention(q: jax.Array,
         top-k selection, attention, and centroid updates (paper Section 4.1).
     impl: "xla" reference | "pallas" gathered kernel | "pallas_fused"
         gather-free kernel (sequence-layout q/k/v, scalar-prefetch
-        membership — no (B,H,k,w,dh) q/k/v intermediates in HBM).
+        membership — no (B,H,k,w,dh) q/k/v intermediates in HBM; the
+        memory plan auto-switches to double-buffered VMEM paging past the
+        residency budget) | "pallas_fused_paged" / "pallas_fused_unpaged"
+        force that plan.
     interpret: Pallas interpret mode for the kernel impls; None derives
         from the platform (compiled on TPU, interpret elsewhere).
     """
@@ -170,15 +179,18 @@ def routed_attention(q: jax.Array,
         scores_k = cluster_scores(r_k, state.mu)
         k_idx = balanced_topk(scores_k, w, pad_mask)
 
-    if impl == "pallas_fused":
+    if impl in _FUSED_IMPLS:
         # gather-free: q/k/v stay in sequence layout; the kernel pulls
         # member rows through the scalar-prefetched indices and the mask
-        # reads the (B,N) position/validity arrays directly
+        # reads the (B,N) position/validity arrays directly. The paged
+        # suffix forces the kernel's memory plan; bare "pallas_fused"
+        # auto-switches on the VMEM residency budget.
         from repro.kernels import ops as kops
         og = kops.routed_attention_fused(
             r_q, None if shared else k_attn, v, q_idx, k_idx,
             positions.astype(jnp.int32), causal=cfg.causal,
-            kvalid=pad_mask, interpret=interpret)
+            kvalid=pad_mask, interpret=interpret,
+            paged=_FUSED_IMPLS[impl])
         attn = None
     else:
         qg = _gather_rows(r_q, q_idx)                    # (B,H,k,w,dh)

@@ -10,6 +10,11 @@ Two things every kernel file needs:
   benchmark interpret mode (and a CPU caller cannot crash into Mosaic).
 * ``float0_like``: custom-VJP cotangents for integer operands (membership
   indices, positions). jax requires ``float0`` for int-dtype primals.
+* ``FUSED_RESIDENT_ELEMS`` / ``fused_paged_default``: the shared rule for
+  when the fused routing kernel keeps the whole (N, dh) sequence plane
+  resident in VMEM vs pages it through double-buffered DMA chunks. The
+  kernel layer, the backend registry, and the benches all derive from
+  this one constant so the auto-switch point cannot drift between them.
 """
 from __future__ import annotations
 
@@ -24,6 +29,22 @@ from jax.experimental.pallas import tpu as pltpu
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 NEG = -1e9
+
+# N*dh budget for whole-plane VMEM residency in the fused routing kernel.
+# At or below it the unpaged kernel (plane as a pipelined input block) is
+# the fast path: one bulk DMA per (batch*head) plane, row pulls from VMEM.
+# Above it the paged kernel streams member rows from HBM instead — was the
+# hard `max_seq_elems` registration cliff before the paged path existed.
+FUSED_RESIDENT_ELEMS = 8192 * 128
+
+
+def fused_paged_default(n: int, dh: int, paged: Optional[bool] = None) -> bool:
+    """Resolve a ``paged`` argument for the fused routing kernel: None
+    auto-pages exactly when the sequence plane would blow the VMEM
+    residency budget; an explicit bool wins."""
+    if paged is None:
+        return n * dh > FUSED_RESIDENT_ELEMS
+    return bool(paged)
 
 
 def default_interpret(interpret: Optional[bool] = None,

@@ -53,13 +53,18 @@ def routed_attention_blocks(qg, kg, vg, pos_q, pos_k, causal=True,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
-                                             "interpret"))
+                                             "interpret", "paged"))
 def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
-                           kvalid=None, bq=128, bk=128, interpret=None):
+                           kvalid=None, bq=128, bk=128, interpret=None,
+                           paged=None):
     """Gather-free fused kernel: sequence-layout q/k/v (k=None reads keys
     from the q buffer — shared-QK causal mode) + (B,H,k,w) membership via
-    scalar prefetch. Returns per-cluster blocks (B,H,k,w,dh)."""
+    scalar prefetch. Returns per-cluster blocks (B,H,k,w,dh).
+
+    ``paged=None`` auto-switches the memory plan on the VMEM residency
+    budget (``FUSED_RESIDENT_ELEMS``): whole-plane resident below it,
+    double-buffered per-row DMA paging above — no sequence-length cliff."""
     with span("kernels/routed_attention_fused"):
         return _routing.routed_attention_fused(
             q, k, v, q_idx, k_idx, positions, causal=causal, kvalid=kvalid,
-            bq=bq, bk=bk, interpret=interpret)
+            bq=bq, bk=bk, interpret=interpret, paged=paged)

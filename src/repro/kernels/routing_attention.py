@@ -19,6 +19,22 @@ Positions are read from the (B,N) sequence-level arrays through the same
 indices, so the causal mask still compares original positions
 (pos_q >= pos_k) and padded keys arrive pre-encoded as pos = SENTINEL.
 
+The fused kernel has two memory plans behind one entry point
+(``paged=None`` auto-switches on the ``FUSED_RESIDENT_ELEMS`` budget):
+
+* *unpaged* — the sequence plane is the kernel's input block (whole
+  (N, dh) plane resident in VMEM, one bulk DMA per batch·head). Fastest
+  while the plane fits; refuses nothing but wastes nothing either.
+* *paged* — q/k/v stay in HBM (``memory_space=ANY``); every grid step
+  pulls exactly the bq/bk member rows of its cluster tile with per-row
+  ``make_async_copy`` DMAs into revolving double-buffered VMEM slots
+  (tile ik+1's DMAs issue before tile ik's compute runs), so VMEM live
+  bytes are O(bq·dh + 4·bk·dh) — independent of N. Membership indices
+  AND pre-gathered int32 positions ride in SMEM as scalar-prefetch
+  operands (4 B/row, so the causal mask needs no position DMAs). This
+  kills the old ``seq_len·head_dim ≈ 1M`` registration cliff: paper-scale
+  N=8k–32k runs fused, forward and backward.
+
 Both kernels are differentiable (``jax.custom_vjp``): the forward emits
 per-row lse stats (m + log l); the backward recomputes p = exp(s - lse)
 tile by tile — no (w x w) matrix is ever stored — and runs a dq kernel
@@ -42,7 +58,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import NEG as _NEG
 from repro.kernels.common import CompilerParams as _CompilerParams
-from repro.kernels.common import default_interpret, float0_like
+from repro.kernels.common import (default_interpret, float0_like,
+                                  fused_paged_default)
 
 SENTINEL = 2 ** 30          # python int: usable inside the kernel body
 
@@ -601,8 +618,365 @@ def _routed_fused_bwd(shared, causal, bq, bk, H, interpret, res, do):
 _routed_fused.defvjp(_routed_fused_fwd, _routed_fused_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Paged fused kernel: q/k/v stay in HBM; member rows stream through
+# revolving double-buffered VMEM slots via per-row async DMA
+# ---------------------------------------------------------------------------
+def _dma_start_rows(hbm, b, idx_ref, c, base, rows, dst, sem):
+    """Issue one-row async copies ``hbm[b, idx_ref[b, c, base+j]] ->
+    dst[j]`` for j < rows, all signalling the same semaphore. Cluster
+    membership has no sequence locality, so rows — not contiguous chunks —
+    are the DMA unit; the scalar-prefetch index table in SMEM drives the
+    source addresses (the same trick the paged decode kernel uses)."""
+    def body(j, _):
+        row = idx_ref[b, c, base + j]
+        pltpu.make_async_copy(hbm.at[b, pl.ds(row, 1)],
+                              dst.at[pl.ds(j, 1)], sem).start()
+        return 0
+    jax.lax.fori_loop(0, rows, body, 0, unroll=False)
+
+
+def _dma_wait_rows(hbm, b, rows, dst, sem):
+    """Wait the ``rows`` one-row copies previously started into ``dst``
+    (the wait descriptor only needs the byte count, so src row 0 serves
+    for every j)."""
+    def body(j, _):
+        pltpu.make_async_copy(hbm.at[b, pl.ds(0, 1)],
+                              dst.at[pl.ds(j, 1)], sem).wait()
+        return 0
+    jax.lax.fori_loop(0, rows, body, 0, unroll=False)
+
+
+def _p_fwd_kernel(qi_ref, ki_ref, pqg_ref, pkg_ref, *refs, shared, causal,
+                  scale, bq, bk):
+    if shared:
+        (q_hbm, v_hbm, o_ref, lse_ref, qt_ref, kt_ref, vt_ref,
+         m_ref, l_ref, acc_ref, q_sem, k_sem, v_sem) = refs
+        k_hbm = q_hbm
+    else:
+        (q_hbm, k_hbm, v_hbm, o_ref, lse_ref, qt_ref, kt_ref, vt_ref,
+         m_ref, l_ref, acc_ref, q_sem, k_sem, v_sem) = refs
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    def start_kv(t, slot):
+        _dma_start_rows(k_hbm, b, ki_ref, c, t * bk, bk,
+                        kt_ref.at[slot], k_sem.at[slot])
+        _dma_start_rows(v_hbm, b, ki_ref, c, t * bk, bk,
+                        vt_ref.at[slot], v_sem.at[slot])
+
+    @pl.when(ik == 0)
+    def _prologue():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _dma_start_rows(q_hbm, b, qi_ref, c, iq * bq, bq, qt_ref, q_sem)
+        start_kv(0, 0)
+        _dma_wait_rows(q_hbm, b, bq, qt_ref, q_sem)
+
+    # double-buffer: tile ik+1's DMAs are in flight while tile ik computes
+    @pl.when(ik + 1 < nk)
+    def _prefetch():
+        start_kv(ik + 1, (ik + 1) % 2)
+
+    slot = ik % 2
+    _dma_wait_rows(k_hbm, b, bk, kt_ref.at[slot], k_sem.at[slot])
+    _dma_wait_rows(v_hbm, b, bk, vt_ref.at[slot], v_sem.at[slot])
+
+    q = qt_ref[...].astype(jnp.float32)
+    k = kt_ref[slot].astype(jnp.float32)
+    v = vt_ref[slot].astype(jnp.float32)
+    pq = pqg_ref[b, c, pl.ds(iq * bq, bq)]
+    pk = pkg_ref[b, c, pl.ds(ik * bk, bk)]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    keep = _keep_mask(pq, pk, causal)
+    s = jnp.where(keep, s, _NEG)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)
+
+
+def _p_dq_kernel(qi_ref, ki_ref, pqg_ref, pkg_ref, *refs, shared, causal,
+                 scale, bq, bk):
+    if shared:
+        (q_hbm, v_hbm, do_ref, lse_ref, dsum_ref, dq_ref,
+         qt_ref, kt_ref, vt_ref, dq_acc, q_sem, k_sem, v_sem) = refs
+        k_hbm = q_hbm
+    else:
+        (q_hbm, k_hbm, v_hbm, do_ref, lse_ref, dsum_ref, dq_ref,
+         qt_ref, kt_ref, vt_ref, dq_acc, q_sem, k_sem, v_sem) = refs
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    def start_kv(t, slot):
+        _dma_start_rows(k_hbm, b, ki_ref, c, t * bk, bk,
+                        kt_ref.at[slot], k_sem.at[slot])
+        _dma_start_rows(v_hbm, b, ki_ref, c, t * bk, bk,
+                        vt_ref.at[slot], v_sem.at[slot])
+
+    @pl.when(ik == 0)
+    def _prologue():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+        _dma_start_rows(q_hbm, b, qi_ref, c, iq * bq, bq, qt_ref, q_sem)
+        start_kv(0, 0)
+        _dma_wait_rows(q_hbm, b, bq, qt_ref, q_sem)
+
+    @pl.when(ik + 1 < nk)
+    def _prefetch():
+        start_kv(ik + 1, (ik + 1) % 2)
+
+    slot = ik % 2
+    _dma_wait_rows(k_hbm, b, bk, kt_ref.at[slot], k_sem.at[slot])
+    _dma_wait_rows(v_hbm, b, bk, vt_ref.at[slot], v_sem.at[slot])
+
+    q = qt_ref[...].astype(jnp.float32)
+    k = kt_ref[slot].astype(jnp.float32)
+    v = vt_ref[slot].astype(jnp.float32)
+    pq = pqg_ref[b, c, pl.ds(iq * bq, bq)]
+    pk = pkg_ref[b, c, pl.ds(ik * bk, bk)]
+    do = do_ref[0, 0].astype(jnp.float32)
+    keep = _keep_mask(pq, pk, causal)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    p = jnp.where(keep, jnp.exp(s - lse_ref[0, 0][:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum_ref[0, 0][:, None]) * scale
+    dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        dq_ref[0, 0] = dq_acc[...]
+
+
+def _p_dkv_kernel(qi_ref, ki_ref, pqg_ref, pkg_ref, *refs, shared, causal,
+                  scale, bq, bk):
+    if shared:
+        (q_hbm, v_hbm, do_ref, lse_ref, dsum_ref, dk_ref, dv_ref,
+         qt_ref, kt_ref, vt_ref, dk_acc, dv_acc,
+         q_sem, k_sem, v_sem) = refs
+        k_hbm = q_hbm
+    else:
+        (q_hbm, k_hbm, v_hbm, do_ref, lse_ref, dsum_ref, dk_ref, dv_ref,
+         qt_ref, kt_ref, vt_ref, dk_acc, dv_acc,
+         q_sem, k_sem, v_sem) = refs
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    ik = pl.program_id(2)
+    iq = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    # swapped roles: the k/v tile is the single resident (it is revisited
+    # by every q sweep step), the q tiles revolve through double buffers
+    @pl.when(iq == 0)
+    def _prologue():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+        _dma_start_rows(k_hbm, b, ki_ref, c, ik * bk, bk, kt_ref, k_sem)
+        _dma_start_rows(v_hbm, b, ki_ref, c, ik * bk, bk, vt_ref, v_sem)
+        _dma_start_rows(q_hbm, b, qi_ref, c, 0, bq, qt_ref.at[0],
+                        q_sem.at[0])
+        _dma_wait_rows(k_hbm, b, bk, kt_ref, k_sem)
+        _dma_wait_rows(v_hbm, b, bk, vt_ref, v_sem)
+
+    @pl.when(iq + 1 < nq)
+    def _prefetch():
+        _dma_start_rows(q_hbm, b, qi_ref, c, (iq + 1) * bq, bq,
+                        qt_ref.at[(iq + 1) % 2], q_sem.at[(iq + 1) % 2])
+
+    slot = iq % 2
+    _dma_wait_rows(q_hbm, b, bq, qt_ref.at[slot], q_sem.at[slot])
+
+    q = qt_ref[slot].astype(jnp.float32)
+    k = kt_ref[...].astype(jnp.float32)
+    v = vt_ref[...].astype(jnp.float32)
+    pq = pqg_ref[b, c, pl.ds(iq * bq, bq)]
+    pk = pkg_ref[b, c, pl.ds(ik * bk, bk)]
+    do = do_ref[0, 0].astype(jnp.float32)
+    keep = _keep_mask(pq, pk, causal)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    p = jnp.where(keep, jnp.exp(s - lse_ref[0, 0][:, None]), 0.0)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum_ref[0, 0][:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(iq == nq - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...]
+        dv_ref[0, 0] = dv_acc[...]
+
+
+def _p_specs(shared):
+    """Paged fused in_specs: q [k] v stay in HBM (ANY memory space) — the
+    kernel DMAs member rows itself, nothing is staged as an input block."""
+    return [pl.BlockSpec(memory_space=pltpu.ANY)] * (2 if shared else 3)
+
+
+def _p_fwd_call(qf, kf, vf, qi, ki, pqg, pkg, shared, causal, bq, bk,
+                interpret):
+    BH, N, dh = qf.shape
+    _, kc, w = qi.shape
+    nq, nk = w // bq, w // bk
+    oq_at, olse_at = _f_q_blk(bq, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(BH, kc, nq, nk),
+        in_specs=_p_specs(shared),
+        out_specs=[oq_at, olse_at],
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), qf.dtype),
+            pltpu.VMEM((2, bk, dh), kf.dtype),
+            pltpu.VMEM((2, bk, dh), vf.dtype),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ])
+    operands = (qi, ki, pqg, pkg, qf) + (() if shared else (kf,)) + (vf,)
+    out, lse = pl.pallas_call(
+        functools.partial(_p_fwd_kernel, shared=shared, causal=causal,
+                          scale=1.0 / (dh ** 0.5), bq=bq, bk=bk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, kc, w, dh), qf.dtype),
+            jax.ShapeDtypeStruct((BH, kc, w), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    return out, lse
+
+
+def _p_bwd_call(qf, kf, vf, qi, ki, pqg, pkg, out, lse, do, shared, causal,
+                bq, bk, interpret):
+    BH, N, dh = qf.shape
+    _, kc, w = qi.shape
+    nq, nk = w // bq, w // bk
+    dsum = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    scale = 1.0 / (dh ** 0.5)
+    kern_kw = dict(shared=shared, causal=causal, scale=scale, bq=bq, bk=bk)
+    params4 = _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                            "arbitrary"))
+
+    q_at, r_at = _f_q_blk(bq, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(BH, kc, nq, nk),
+        in_specs=_p_specs(shared) + [q_at, r_at, r_at],   # do, lse, dsum
+        out_specs=q_at,                                   # dqg blocks
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), qf.dtype),
+            pltpu.VMEM((2, bk, dh), kf.dtype),
+            pltpu.VMEM((2, bk, dh), vf.dtype),
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ])
+    operands = ((qi, ki, pqg, pkg, qf) + (() if shared else (kf,))
+                + (vf, do, lse, dsum))
+    dqg = pl.pallas_call(
+        functools.partial(_p_dq_kernel, **kern_kw),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, kc, w, dh), jnp.float32),
+        compiler_params=params4,
+        interpret=interpret,
+    )(*operands)
+
+    # swapped grid: key tile parallel over (b, c, ik), query sweep inner
+    q_at2, r_at2 = _f_q_blk_swapped(bq, dh)
+    k_out = lambda b, c, ik, iq, *_: (b, c, ik, 0)
+    grid_spec2 = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(BH, kc, nk, nq),
+        in_specs=_p_specs(shared) + [q_at2, r_at2, r_at2],
+        out_specs=[pl.BlockSpec((1, 1, bk, dh), k_out),
+                   pl.BlockSpec((1, 1, bk, dh), k_out)],
+        scratch_shapes=[
+            pltpu.VMEM((2, bq, dh), qf.dtype),
+            pltpu.VMEM((bk, dh), kf.dtype),
+            pltpu.VMEM((bk, dh), vf.dtype),
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ])
+    dkg, dvg = pl.pallas_call(
+        functools.partial(_p_dkv_kernel, **kern_kw),
+        grid_spec=grid_spec2,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, kc, w, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, kc, w, dh), jnp.float32),
+        ],
+        compiler_params=params4,
+        interpret=interpret,
+    )(*operands)
+
+    # chunked scatter-add of per-cluster gradient blocks to sequence
+    # layout (same transpose-of-the-gather as the unpaged path)
+    bi = jnp.arange(BH)[:, None]
+    qi2 = qi.reshape(BH, -1)
+    ki2 = ki.reshape(BH, -1)
+    dq = jnp.zeros((BH, N, dh), jnp.float32).at[bi, qi2].add(
+        dqg.reshape(BH, -1, dh))
+    dk = jnp.zeros((BH, N, dh), jnp.float32).at[bi, ki2].add(
+        dkg.reshape(BH, -1, dh))
+    dv = jnp.zeros((BH, N, dh), jnp.float32).at[bi, ki2].add(
+        dvg.reshape(BH, -1, dh))
+    return dq.astype(qf.dtype), dk.astype(kf.dtype), dv.astype(vf.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _routed_paged(shared, causal, bq, bk, interpret, qf, kf, vf, qi, ki,
+                  pqg, pkg):
+    out, _ = _p_fwd_call(qf, kf, vf, qi, ki, pqg, pkg, shared, causal,
+                         bq, bk, interpret)
+    return out
+
+
+def _routed_paged_fwd(shared, causal, bq, bk, interpret, qf, kf, vf, qi,
+                      ki, pqg, pkg):
+    out, lse = _p_fwd_call(qf, kf, vf, qi, ki, pqg, pkg, shared, causal,
+                           bq, bk, interpret)
+    return out, (qf, kf, vf, qi, ki, pqg, pkg, out, lse)
+
+
+def _routed_paged_bwd(shared, causal, bq, bk, interpret, res, do):
+    qf, kf, vf, qi, ki, pqg, pkg, out, lse = res
+    dq, dk, dv = _p_bwd_call(qf, kf, vf, qi, ki, pqg, pkg, out, lse, do,
+                             shared, causal, bq, bk, interpret)
+    return (dq, dk, dv, float0_like(qi), float0_like(ki),
+            float0_like(pqg), float0_like(pkg))
+
+
+_routed_paged.defvjp(_routed_paged_fwd, _routed_paged_bwd)
+
+
 def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
-                           kvalid=None, bq=128, bk=128, interpret=None):
+                           kvalid=None, bq=128, bk=128, interpret=None,
+                           paged=None):
     """Gather-free routed attention on sequence-layout tensors.
 
     q/v: (B,H,N,dh); k: like q, or None for shared-QK causal mode (keys
@@ -611,6 +985,13 @@ def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
     positions: (B,N) int32 original positions (the causal mask compares
     these). kvalid: (B,N) bool, True = attendable key (padding False).
     Returns per-cluster outputs (B,H,k,w,dh); callers scatter them back.
+
+    ``paged=None`` auto-selects the memory plan: whole-plane VMEM
+    residency while N·dh fits ``FUSED_RESIDENT_ELEMS``, double-buffered
+    per-row DMA paging beyond it (VMEM bounded by the tile sizes, not N).
+    Pass True/False to force a plan. The paged path pre-gathers int32
+    positions per member (4 B/row, SMEM scalar-prefetch) — still no
+    gathered q/k/v tensor in HBM.
 
     Differentiable: flash-style custom VJP that recomputes p from saved
     lse stats and scatter-adds per-cluster dq/dk/dv to sequence layout.
@@ -629,7 +1010,20 @@ def routed_attention_fused(q, k, v, q_idx, k_idx, positions, causal=True,
     posq = positions.astype(jnp.int32)
     posk = (jnp.where(kvalid, posq, SENTINEL) if kvalid is not None
             else posq)
-    out = _routed_fused(shared, bool(causal), int(bq), int(bk), int(H),
-                        default_interpret(interpret), qf, kf, vf, qi, ki,
-                        posq, posk)
+    if fused_paged_default(N, dh, paged):
+        pq_src = jnp.broadcast_to(posq[:, None, :], (B, H, N))
+        pk_src = jnp.broadcast_to(posk[:, None, :], (B, H, N))
+        pqg = jnp.take_along_axis(pq_src.reshape(B * H, N),
+                                  qi.reshape(B * H, kc * w),
+                                  axis=1).reshape(B * H, kc, w)
+        pkg = jnp.take_along_axis(pk_src.reshape(B * H, N),
+                                  ki.reshape(B * H, kc * w),
+                                  axis=1).reshape(B * H, kc, w)
+        out = _routed_paged(shared, bool(causal), int(bq), int(bk),
+                            default_interpret(interpret), qf, kf, vf,
+                            qi, ki, pqg, pkg)
+    else:
+        out = _routed_fused(shared, bool(causal), int(bq), int(bk),
+                            int(H), default_interpret(interpret), qf, kf,
+                            vf, qi, ki, posq, posk)
     return out.reshape(B, H, kc, w, dh)

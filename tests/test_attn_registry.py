@@ -285,18 +285,100 @@ def test_fused_routing_preferred_on_tpu():
         assert A.resolve(spec, platform="cpu").impl == "xla"
         assert A.decode_backend(spec, platform="tpu").impl == "pallas_paged"
         assert A.decode_backend(spec, platform="cpu").impl == "xla"
-        # beyond the fused kernel's VMEM-resident plane budget
-        # (max_seq_elems caps seq_len x head_dim), auto-selection falls
-        # back to the per-tile gathered kernel instead of failing Mosaic
-        # compilation — and the budget is dh-aware: wide heads shrink
-        # the legal N (dh=32 here -> fallback only past N=32k)
+        # no VMEM-residency cliff anymore: the fused kernel auto-switches
+        # to the double-buffered paged memory plan past the residency
+        # budget, so auto-selection stays fused at every sequence length
         assert A.resolve(spec, platform="tpu",
                          seq_len=16384).impl == "pallas_fused"
         assert A.resolve(spec, platform="tpu",
-                         seq_len=65536).impl == "pallas"
+                         seq_len=65536).impl == "pallas_fused"
     wide = A.AttentionSpec(variant="routing", num_heads=4, num_kv_heads=4,
                            head_dim=256, routing=ROUTING)
-    assert A.resolve(wide, platform="tpu", seq_len=8192).impl == "pallas"
+    assert A.resolve(wide, platform="tpu",
+                     seq_len=8192).impl == "pallas_fused"
+    # ... but the *forced* unpaged plan keeps the cap, and refusing it
+    # names the auto-selected escape hatch
+    spec = _spec("routing")
+    with pytest.raises(A.BackendResolutionError,
+                       match=r"max_seq_elems.*\n.*pallas_fused"):
+        A.resolve(spec, platform="tpu", seq_len=65536,
+                  impl="pallas_fused_unpaged")
+
+
+def test_paged_fused_impls_in_parity_matrix():
+    """Both forced memory plans of the fused kernel are registered for
+    both routing variants — and therefore auto-picked-up by the
+    NON_REFERENCE parity matrix above (forward, padded, and grad legs
+    run against each without hand-listing them here)."""
+    names = {b.name for b in NON_REFERENCE}
+    for variant in ("routing", "local+routing"):
+        assert f"{variant}/pallas_fused_paged" in names
+        assert f"{variant}/pallas_fused_unpaged" in names
+        # forced-plan backends are escape hatches, not contenders:
+        # auto-selection must keep landing on the auto-switching impl
+        assert A.resolve(_spec(variant), platform="tpu").impl == \
+            "pallas_fused"
+
+
+def test_capacity_fallback_counts_and_warns_once():
+    """Auto-selection that skips a higher-priority backend purely on
+    sequence capacity (max_seq/max_seq_elems) increments the obs
+    'attn/fallback' counter every time and warns once per (excluded,
+    chosen) pair — the N=8k-silently-lands-on-a-slower-path failure
+    mode has a signal."""
+    import warnings
+    from repro.obs import default_registry
+    spec = _spec("full")
+    registry.register(Backend(
+        variant="full", impl="_test_capped",
+        apply=lambda *a, **k: None, priority=99,
+        caps=Capabilities(max_seq_elems=1024, supports_grad=True)))
+    try:
+        registry._FALLBACK_WARNED.clear()
+        ctr = default_registry().counter("attn/fallback")
+        before = ctr.value
+        # under the cap the capped backend wins outright: no fallback
+        assert A.resolve(spec, seq_len=16).impl == "_test_capped"
+        assert ctr.value == before
+        # past the cap: fall back to the best eligible backend, warn
+        with pytest.warns(RuntimeWarning,
+                          match=r"fell back from full/_test_capped"):
+            assert A.resolve(spec, seq_len=256).impl == "xla"
+        assert ctr.value == before + 1
+        # second occurrence: counted again, but not re-warned
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            A.resolve(spec, seq_len=256)
+        assert ctr.value == before + 2
+    finally:
+        A.unregister("full", "_test_capped")
+        registry._FALLBACK_WARNED.clear()
+
+
+def test_mixed_local_half_uses_window_kernel(monkeypatch):
+    """local+routing Pallas-family backends run the local half on the
+    Pallas window kernel (which carries its own VJP — the composite
+    gradient is kernel-backed end to end, covered by the matrix grad
+    leg) when the case is expressible, and fall back to the XLA local
+    reference when it is not (pad_mask)."""
+    import repro.kernels.ops as kops
+    calls = []
+    orig = kops.local_attention
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(kops, "local_attention", spy)
+    spec = _spec("local+routing")
+    q, k, v, mu = _inputs(spec)
+    A.attend(spec, q, k, v, state=mu, update_state=False,
+             impl="pallas_fused")
+    assert calls, "local half did not reach the Pallas window kernel"
+    calls.clear()
+    A.attend(spec, q, k, v, state=mu, update_state=False,
+             impl="pallas_fused", **_case_kwargs("padded"))
+    assert not calls, "pad_mask case must use the XLA local reference"
 
 
 def test_supports_grad_capability_enforced():
